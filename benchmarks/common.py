@@ -1,0 +1,108 @@
+"""Shared benchmark fixtures: FedBench-like federation at benchmark scale,
+all optimizers, simulated network execution-time model.
+
+ET model: the oracle engine measures pure compute; real federations pay
+per-request latency and per-tuple transfer. We report
+    ET_sim = wall_ms + REQUEST_MS * requests + TUPLE_MS * transferred
+with constants representative of LAN SPARQL endpoints (Virtuoso-era setup of
+the paper). Relative orderings — the paper's claims — are what matter.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.baselines import FedXOptimizer, HibiscusOptimizer, VoidDPOptimizer
+from repro.baselines.hybrids import FedXOdyssey, OdysseyFedX
+from repro.core.federation import build_federated_stats
+from repro.core.planner import OdysseyOptimizer
+from repro.engine.local import LocalEngine
+from repro.rdf.generator import fedbench_like_spec, generate_federation, generate_workload
+
+REQUEST_MS = 30.0
+TUPLE_MS = 0.05
+
+_CACHE: dict = {}
+
+
+def fixture(scale: float = 1.0, seed: int = 7):
+    key = (scale, seed)
+    if key not in _CACHE:
+        fed, gt = generate_federation(fedbench_like_spec(scale=scale, seed=seed))
+        stats = build_federated_stats(fed)
+        queries = generate_workload(fed, gt, n_star=11, n_hybrid=7, n_path=7, seed=13)
+        # name queries after the paper's groups: LD (path/linked), CD (hybrid),
+        # LS (star) — shapes match the groups' character
+        for q in queries:
+            q.name = q.name.replace("ST", "LS").replace("HY", "CD").replace("PA", "LD")
+        _CACHE[key] = (fed, gt, stats, queries)
+    return _CACHE[key]
+
+
+def make_optimizers(fed, stats) -> dict:
+    return {
+        "Odyssey": OdysseyOptimizer(stats),
+        "FedX-Cold": FedXOptimizer(fed, warm=False),
+        "FedX-Warm": FedXOptimizer(fed, warm=True),
+        "HiBISCuS": HibiscusOptimizer(fed),
+        "DP-VOID": VoidDPOptimizer(fed),
+        "SPLENDID": VoidDPOptimizer(fed, use_ask=True),
+        "Odyssey-FedX": OdysseyFedX(stats),
+        "FedX-Odyssey": FedXOdyssey(stats, fed),
+    }
+
+
+@dataclass
+class QueryRun:
+    query: str
+    engine: str
+    ot_ms: float
+    et_ms: float
+    et_sim_ms: float
+    ntt: int
+    nsq: int
+    nss: int
+    requests: int
+    complete: bool
+
+
+def run_all(scale: float = 1.0, engines: list[str] | None = None,
+            repeats: int = 3) -> list[QueryRun]:
+    from repro.engine.local import naive_evaluate
+
+    fed, gt, stats, queries = fixture(scale)
+    opts = make_optimizers(fed, stats)
+    if engines:
+        opts = {k: v for k, v in opts.items() if k in engines}
+    eng = LocalEngine(fed)
+    runs: list[QueryRun] = []
+    for q in queries:
+        want = naive_evaluate(fed, q)
+        for name, opt in opts.items():
+            ots, ets = [], []
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                plan = opt.optimize(q)
+                ots.append((time.perf_counter() - t0) * 1e3)
+                rel, m = eng.execute(plan)
+                ets.append(m.wall_ms)
+            proj = q.effective_projection()
+            n = len(next(iter(rel.values()))) if rel else 0
+            got = set(zip(*[rel[v].tolist() for v in proj])) if n else set()
+            runs.append(QueryRun(
+                query=q.name, engine=name,
+                ot_ms=float(np.median(ots)), et_ms=float(np.median(ets)),
+                et_sim_ms=float(np.median(ets)) + REQUEST_MS * m.requests
+                + TUPLE_MS * m.transferred_tuples,
+                ntt=m.transferred_tuples, nsq=plan.n_subqueries,
+                nss=plan.n_selected_sources, requests=m.requests,
+                complete=got == want,
+            ))
+    return runs
+
+
+def geomean(xs) -> float:
+    xs = [max(x, 1e-9) for x in xs]
+    return float(np.exp(np.mean(np.log(xs))))

@@ -1,0 +1,90 @@
+"""Kernel microbenchmarks: Pallas (interpret mode on CPU — structural check,
+TPU is the target) vs the pure-jnp reference, per shape."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.join_count import join_count
+from repro.kernels.seg_bitmap import NBUCKETS, seg_bitmap
+from repro.kernels.sorted_intersect import sorted_intersect_weighted
+from repro.kernels.summary_probe import summary_probe
+
+
+def _time(fn, *args, n=5) -> float:
+    fn(*args)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / n * 1e6  # us
+
+
+def run():
+    rng = np.random.default_rng(0)
+    rows = []
+    # sorted_intersect
+    for n in (1024, 4096):
+        a = jnp.asarray(np.sort(rng.choice(10 * n, n, replace=False)).astype(np.int32))
+        b = jnp.asarray(np.sort(rng.choice(10 * n, n, replace=False)).astype(np.int32))
+        w = jnp.ones(n, jnp.int32)
+        t_ref = _time(jax.jit(ref.sorted_intersect_weighted_ref), a, w, b, w)
+        t_pal = _time(lambda *x: sorted_intersect_weighted(*x), a, w, b, w)
+        rows.append((f"kernel/sorted_intersect/{n}", t_pal, t_ref))
+    # seg_bitmap
+    for n, s in ((1024, 128), (4096, 256)):
+        seg = jnp.asarray(np.sort(rng.integers(0, s, n)).astype(np.int32))
+        bkt = jnp.asarray(rng.integers(0, NBUCKETS, n).astype(np.int32))
+        t_ref = _time(jax.jit(lambda a, b: ref.seg_bitmap_ref(a, b, s, NBUCKETS)), seg, bkt)
+        t_pal = _time(lambda a, b: seg_bitmap(a, b, s), seg, bkt)
+        rows.append((f"kernel/seg_bitmap/{n}x{s}", t_pal, t_ref))
+    # join_count
+    for n in (1024, 4096):
+        probe = jnp.asarray(rng.integers(0, 5000, n).astype(np.int32))
+        build = jnp.asarray(np.sort(rng.choice(8000, n, replace=False)).astype(np.int32))
+        bw = jnp.ones(n, jnp.int32)
+        t_ref = _time(jax.jit(ref.join_count_ref), probe, build, bw)
+        t_pal = _time(lambda *x: join_count(*x), probe, build, bw)
+        rows.append((f"kernel/join_count/{n}", t_pal, t_ref))
+    # summary_probe
+    for na, w in ((128, 8), (256, 32)):
+        a = jnp.asarray(rng.integers(-2**31, 2**31 - 1, (na, w), dtype=np.int64).astype(np.int32))
+        b = jnp.asarray(rng.integers(-2**31, 2**31 - 1, (na, w), dtype=np.int64).astype(np.int32))
+        t_ref = _time(jax.jit(ref.summary_probe_ref), a, b)
+        t_pal = _time(lambda *x: summary_probe(*x), a, b)
+        rows.append((f"kernel/summary_probe/{na}x{w}", t_pal, t_ref))
+    # flash attention
+    from repro.kernels.flash_attention import flash_attention
+
+    for S in (256, 512):
+        q = jnp.asarray(rng.normal(size=(2, S, 128)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(2, S, 128)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(2, S, 128)), jnp.float32)
+
+        def naive(q, k, v):
+            s = jnp.einsum("bqd,bkd->bqk", q, k)
+            m = jnp.where(jnp.arange(S)[None, :] > jnp.arange(S)[:, None], -1e30, 0.0)
+            return jax.nn.softmax(s + m, -1) @ v
+
+        t_ref = _time(jax.jit(naive), q, k, v)
+        t_pal = _time(lambda *x: flash_attention(*x, causal=True), q, k, v)
+        rows.append((f"kernel/flash_attention/{S}", t_pal, t_ref))
+    # selective scan
+    from repro.kernels.ssm_scan import ssm_scan
+
+    for S, D in ((64, 256),):
+        dt = jnp.asarray(np.abs(rng.normal(0.1, 0.05, (1, S, D))), jnp.float32)
+        bt = jnp.asarray(rng.normal(size=(1, S, 8)), jnp.float32)
+        ct = jnp.asarray(rng.normal(size=(1, S, 8)), jnp.float32)
+        x = jnp.asarray(rng.normal(size=(1, S, D)), jnp.float32)
+        a = -jnp.asarray(np.abs(rng.normal(1.0, 0.3, (D, 8))), jnp.float32)
+        t_ref = _time(jax.jit(ref.ssm_scan_ref), dt, bt, ct, x, a, n=2)
+        t_pal = _time(lambda *z: ssm_scan(*z, chunk=32), dt, bt, ct, x, a, n=2)
+        rows.append((f"kernel/ssm_scan/{S}x{D}", t_pal, t_ref))
+    lines = ["== Kernel microbench (us/call; Pallas interpret vs jnp ref) =="]
+    for name, t_pal, t_ref in rows:
+        lines.append(f"{name:40} pallas={t_pal:10.1f}  ref={t_ref:10.1f}")
+    return [(n, p, r) for n, p, r in rows], "\n".join(lines)

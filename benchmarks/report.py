@@ -1,0 +1,131 @@
+"""Render EXPERIMENTS.md from results artifacts.
+
+    PYTHONPATH=src python -m benchmarks.report
+
+Reads results/dryrun.json (+ dryrun_opt.json, benchmarks.txt if present) and
+regenerates the tables; narrative sections live here as templates so the doc
+always matches the artifacts.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+
+def _load(path):
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return {}
+
+
+def _fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def dryrun_section(res: dict) -> str:
+    lines = [
+        "## §Dry-run — 512-chip multi-pod lower+compile for every cell",
+        "",
+        "Meshes: `(16,16) (data,model)` single-pod and `(2,16,16) (pod,data,model)`",
+        "multi-pod, built by `repro.launch.mesh.make_production_mesh`. Every cell is",
+        "`jax.jit(step, in_shardings, out_shardings).lower(*ShapeDtypeStructs).compile()`;",
+        "`memory_analysis()` / `cost_analysis()` excerpts below, full records in",
+        "`results/dryrun.json` (regenerate: `PYTHONPATH=src python -m repro.launch.dryrun",
+        "--arch all --shape all --mesh both --out results/dryrun.json`).",
+        "",
+        "| cell | status | compile_s | XLA flops/dev | arg bytes/dev | collectives (count) |",
+        "|---|---|---|---|---|---|",
+    ]
+    for key in sorted(res):
+        r = res[key]
+        if r.get("status") == "skipped":
+            lines.append(f"| {key} | SKIP: {r['reason'][:48]} | | | | |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {key} | ERROR | | | | |")
+            continue
+        mem = r.get("memory_analysis", {})
+        coll = ", ".join(f"{k}×{v}" for k, v in sorted(
+            r.get("collective_counts", {}).items()))
+        lines.append(
+            f"| {key} | ok | {r['compile_s']:.1f} | {r['xla_flops_reported']:.2e} | "
+            f"{_fmt_bytes(mem.get('argument_bytes'))} | {coll} |")
+    n_ok = sum(1 for r in res.values() if r.get("status") == "ok")
+    n_skip = sum(1 for r in res.values() if r.get("status") == "skipped")
+    lines.append("")
+    lines.append(f"**{n_ok} cells compile, {n_skip} documented skips, "
+                 f"{sum(1 for r in res.values() if r.get('status') == 'error')} errors.**")
+    return "\n".join(lines)
+
+
+def roofline_section(res: dict) -> str:
+    lines = [
+        "## §Roofline — three terms per (arch × shape × mesh)",
+        "",
+        "Terms from the per-device post-SPMD HLO (parser multiplies `while` bodies",
+        "by recovered trip counts — XLA's own `cost_analysis` counts scan bodies",
+        "once, verified empirically). Constants: 197 TFLOP/s bf16, 819 GB/s HBM,",
+        "50 GB/s ICI link. MODEL_FLOPS = 6·N(active)·tokens (train) /",
+        "2·N(active)·tokens + KV reads (decode).",
+        "",
+        "| cell | compute_s | memory_s | collective_s | bottleneck | MODEL/HLO flops | roofline frac |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for key in sorted(res):
+        r = res[key]
+        if r.get("status") != "ok":
+            continue
+        useful = (r["model_flops_total"] / (r["flops_per_dev"] * r["n_chips"])
+                  if r["flops_per_dev"] else 0.0)
+        lines.append(
+            f"| {key} | {r['compute_s']:.4f} | {r['memory_s']:.4f} | "
+            f"{r['collective_s']:.4f} | **{r['bottleneck']}** | {useful:.2f} | "
+            f"{100 * r['roofline_fraction']:.2f}% |")
+    return "\n".join(lines)
+
+
+def perf_section(base: dict, opt: dict) -> str:
+    lines = ["### Baseline vs optimized (hillclimbed cells)", "",
+             "| cell | term | baseline | optimized | Δ |",
+             "|---|---|---|---|---|"]
+    for key in sorted(opt):
+        o = opt[key]
+        b = base.get(key)
+        if not b or o.get("status") != "ok" or b.get("status") != "ok":
+            continue
+        for term in ("compute_s", "memory_s", "collective_s"):
+            ratio = b[term] / max(o[term], 1e-12)
+            lines.append(f"| {key} | {term} | {b[term]:.4f} | {o[term]:.4f} | "
+                         f"{ratio:.1f}× |")
+        lines.append(f"| {key} | bottleneck | {b['bottleneck']} | "
+                     f"{o['bottleneck']} | roofline {100 * b['roofline_fraction']:.2f}%"
+                     f" → {100 * o['roofline_fraction']:.2f}% |")
+    return "\n".join(lines)
+
+
+def build(narrative_path: str = "benchmarks/experiments_narrative.md",
+          out_path: str = "EXPERIMENTS.md") -> None:
+    base = _load("results/dryrun.json")
+    opt = _load("results/dryrun_opt.json")
+    with open(narrative_path) as f:
+        doc = f.read()
+    doc = doc.replace("<!--DRYRUN-->", dryrun_section(base))
+    doc = doc.replace("<!--ROOFLINE-->", roofline_section(base))
+    doc = doc.replace("<!--PERF-TABLE-->", perf_section(base, opt))
+    if os.path.exists("results/benchmarks.txt"):
+        with open("results/benchmarks.txt") as f:
+            doc = doc.replace("<!--FEDBENCH-->", "```\n" + f.read() + "\n```")
+    with open(out_path, "w") as f:
+        f.write(doc)
+    print(f"wrote {out_path}")
+
+
+if __name__ == "__main__":
+    build()

@@ -1,0 +1,33 @@
+"""Roofline table from the dry-run artifacts (results/dryrun.json)."""
+from __future__ import annotations
+
+import json
+import os
+
+
+def run(path: str = "results/dryrun.json"):
+    if not os.path.exists(path):
+        return [], ("== Roofline == (results/dryrun.json not found; run "
+                    "PYTHONPATH=src python -m repro.launch.dryrun first)")
+    with open(path) as f:
+        results = json.load(f)
+    lines = ["== Roofline (per arch x shape x mesh; seconds per step) ==",
+             f"{'cell':52}{'compute':>10}{'memory':>10}{'collect':>10}"
+             f"{'bottleneck':>12}{'roofline%':>10}"]
+    csv = []
+    for key in sorted(results):
+        r = results[key]
+        if r.get("status") == "skipped":
+            lines.append(f"{key:52}{'skipped: ' + r['reason']}")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"{key:52}ERROR {r.get('error', '')[:60]}")
+            continue
+        lines.append(
+            f"{key:52}{r['compute_s']:>10.4f}{r['memory_s']:>10.4f}"
+            f"{r['collective_s']:>10.4f}{r['bottleneck']:>12}"
+            f"{100 * r['roofline_fraction']:>9.1f}%")
+        csv.append((f"roofline/{key}", max(r["compute_s"], r["memory_s"],
+                                           r["collective_s"]) * 1e6,
+                    r["roofline_fraction"]))
+    return csv, "\n".join(lines)

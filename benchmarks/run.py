@@ -1,0 +1,62 @@
+"""Benchmark harness: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--scale S] [--quick]
+
+Prints ``name,us_per_call,derived`` CSV rows (stdout) and human-readable
+tables (stderr + results/benchmarks.txt).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=None)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    scale = args.scale if args.scale is not None else (0.25 if args.quick else 1.0)
+
+    from benchmarks import fedbench_figs as F
+    from benchmarks import kernel_bench, roofline_bench
+    from benchmarks.common import run_all
+
+    csv_rows: list[tuple] = []
+    tables: list[str] = []
+
+    def add(result):
+        csv, text = result
+        csv_rows.extend(csv)
+        tables.append(text)
+
+    add(F.table2_statistics(scale))
+    add(F.cardinality_accuracy(scale))
+    runs = run_all(scale)
+    incomplete = [r for r in runs if not r.complete]
+    tables.append(f"result completeness: {len(runs) - len(incomplete)}/{len(runs)} "
+                  f"runs complete" + (f" INCOMPLETE: {[(r.engine, r.query) for r in incomplete]}"
+                                      if incomplete else ""))
+    add(F.fig4_optimization_time(runs))
+    add(F.fig5_selected_sources(runs))
+    add(F.fig6_subqueries(runs))
+    add(F.fig7_execution_time(runs))
+    add(F.fig8_transferred_tuples(runs))
+    add(F.fig9_hybrids(runs))
+    add(kernel_bench.run())
+    add(roofline_bench.run())
+
+    text = "\n\n".join(tables)
+    os.makedirs("results", exist_ok=True)
+    with open("results/benchmarks.txt", "w") as f:
+        f.write(text)
+    print(text, file=sys.stderr)
+
+    print("name,us_per_call,derived")
+    for name, us, derived in csv_rows:
+        print(f"{name},{us:.3f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

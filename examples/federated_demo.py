@@ -1,0 +1,88 @@
+"""Federated statistics deep-dive: Algorithm 1, summaries, and completeness.
+
+    PYTHONPATH=src python examples/federated_demo.py
+
+Reproduces the paper's §3.2 narrative on synthetic LMDB/DBpedia: computes the
+link exports, runs ComputeFedCPs with and without summary pruning, verifies
+they agree (the no-false-negative guarantee), and uses the federated CPs for
+a cross-dataset cardinality estimate (formula 3/4 analog of Table 1).
+"""
+import numpy as np
+
+from repro.core.characteristic_sets import compute_characteristic_sets
+from repro.core.cardinality import (linked_star_cardinality_distinct,
+                                    linked_star_cardinality_estimate)
+from repro.core.federation import compute_federated_cps, export_link_stats
+from repro.core.summaries import build_summary
+from repro.engine.local import naive_evaluate
+from repro.query.algebra import BGPQuery, Const, TriplePattern, Var
+from repro.rdf.generator import fedbench_like_spec, generate_federation
+
+
+def main():
+    fed, gt = generate_federation(fedbench_like_spec(scale=0.5))
+    lmdb = fed.by_name("LMDB")
+    dbp = fed.by_name("DBpedia")
+    kinds = np.asarray(fed.dictionary.kinds, np.int8)
+    auth = fed.dictionary.authority_array()
+
+    print("== per-source statistics ==")
+    cs_l = compute_characteristic_sets(lmdb.table)
+    cs_d = compute_characteristic_sets(dbp.table)
+    print(f"LMDB:    {lmdb.table.n_triples:,} triples, {cs_l.n_cs} CSs")
+    print(f"DBpedia: {dbp.table.n_triples:,} triples, {cs_d.n_cs} CSs")
+
+    exp_l = export_link_stats(lmdb.table, cs_l, lmdb.sid, entity_mask=kinds == 0)
+    exp_d = export_link_stats(dbp.table, cs_d, dbp.sid, entity_mask=kinds == 0)
+    summ_l = build_summary(lmdb.table, cs_l, auth, lmdb.sid, entity_mask=kinds == 0)
+    summ_d = build_summary(dbp.table, cs_d, auth, dbp.sid, entity_mask=kinds == 0)
+    print(f"\nexports: LMDB {exp_l.nbytes() / 1024:.0f} KB, "
+          f"DBpedia {exp_d.nbytes() / 1024:.0f} KB")
+    print(f"summaries: LMDB {summ_l.nbytes() / 1024:.0f} KB, "
+          f"DBpedia {summ_d.nbytes() / 1024:.0f} KB")
+
+    print("\n== Algorithm 1: federated CPs LMDB -> DBpedia ==")
+    full = compute_federated_cps(exp_l, exp_d)
+    pruned = compute_federated_cps(exp_l, exp_d, summ_l, summ_d)
+    print(f"without summaries: {full.n_checked_pairs} exact intersections")
+    print(f"with summaries:    {pruned.n_checked_pairs} exact intersections "
+          f"({full.n_checked_pairs / max(1, pruned.n_checked_pairs):.1f}x pruning)")
+    same = (np.array_equal(full.cps.count, pruned.cps.count)
+            and np.array_equal(full.cps.pred, pruned.cps.pred))
+    print(f"identical federated CPs: {same}  (paper: summaries find 100%)")
+    print(f"federated CPs found: {pruned.cps.n_cp}, "
+          f"entity pairs: {int(pruned.cps.count.sum()):,}")
+
+    # Table-1-style cardinality check on a cross-dataset query
+    same_as = fed.dictionary.id_of("owl:sameAs")
+    rdf_type = fed.dictionary.id_of("rdf:type")
+    # find an LMDB predicate co-occurring with sameAs
+    lmdb_preds = [int(p) for p in cs_l.pred_ids if int(p) != same_as]
+    best = None
+    for c in range(cs_l.n_cs):
+        preds = set(cs_l.preds_of(c).tolist())
+        if same_as in preds:
+            others = [p for p in preds if p != same_as and p != rdf_type]
+            if others:
+                best = others[0]
+                break
+    if best is None:
+        print("no co-occurring predicate found")
+        return
+    q = BGPQuery([
+        TriplePattern(Var("x"), Const(same_as), Var("y")),
+        TriplePattern(Var("x"), Const(best), Var("v")),
+        TriplePattern(Var("y"), Const(rdf_type), Var("t")),
+    ], distinct=True, projection=["x", "y"])
+    exact = linked_star_cardinality_distinct(
+        pruned.cps, cs_l, cs_d, [best], [rdf_type], same_as)
+    est = linked_star_cardinality_estimate(
+        pruned.cps, cs_l, cs_d, [best, same_as], [rdf_type], same_as)
+    true = len(naive_evaluate(fed, q))
+    print(f"\ncross-dataset query cardinality: formula(3)={exact} "
+          f"formula(4)={est:.0f} true={true}")
+    print("formula (3) exactness:", "EXACT" if exact == true else "MISMATCH")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Quickstart: the Odyssey pipeline end to end on a synthetic federation.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. Generate a FedBench-like federation (9 sources).
+2. Compute CS/CP statistics + entity summaries + federated CPs (Algorithm 1).
+3. Parse a SPARQL query, optimize it with Odyssey, execute it, and compare
+   plan metrics against a FedX-style heuristic baseline.
+"""
+import numpy as np
+
+from repro.baselines import FedXOptimizer
+from repro.core.federation import build_federated_stats
+from repro.core.planner import JoinPlanNode, OdysseyOptimizer, SubqueryNode
+from repro.engine.local import LocalEngine, naive_evaluate
+from repro.query.sparql import parse_sparql
+from repro.rdf.generator import fedbench_like_spec, generate_federation, generate_workload
+
+
+def show_plan(node, fed, depth=0):
+    pad = "  " * depth
+    if isinstance(node, SubqueryNode):
+        srcs = ",".join(fed.sources[s].name for s in node.sources)
+        print(f"{pad}Subquery(stars={node.stars}, sources=[{srcs}], "
+              f"{len(node.patterns)} patterns, est={node.est_cardinality:.0f})")
+    else:
+        assert isinstance(node, JoinPlanNode)
+        print(f"{pad}{node.strategy.upper()}-JOIN on {node.join_vars}")
+        show_plan(node.left, fed, depth + 1)
+        show_plan(node.right, fed, depth + 1)
+
+
+def main():
+    print("== generating federation ==")
+    fed, gt = generate_federation(fedbench_like_spec(scale=0.5))
+    print(f"{len(fed)} sources, {fed.total_triples():,} triples")
+
+    print("\n== computing Odyssey statistics (CS/CP + summaries + Alg.1) ==")
+    stats = build_federated_stats(fed)
+    for i, src in enumerate(fed.sources):
+        print(f"  {src.name:10} {stats.cs[i].n_cs:4} CSs, "
+              f"{stats.intra_cp[i].n_cp:6} CPs")
+    n_fcp = sum(v.n_cp for v in stats.fed_cp.values())
+    print(f"  federated CPs across sources: {n_fcp} "
+          f"(summary pruning: {stats.pruning_checked}/{stats.pruning_possible} "
+          "exact checks)")
+
+    # a hybrid query via the SPARQL parser (Listing 1.4 analog)
+    lmdb_pred = [t for t in fed.dictionary.terms if t == "owl:sameAs"][0]
+    query_text = """
+    SELECT DISTINCT ?x ?y WHERE {
+      ?x owl:sameAs ?y .
+      ?x lmdb:sequel ?s .
+      ?y rdf:type ?t .
+    }"""
+    q = parse_sparql(query_text, fed.dictionary)
+    print(f"\n== query ==\n{query_text}")
+
+    engine = LocalEngine(fed)
+    for name, opt in (("Odyssey", OdysseyOptimizer(stats)),
+                      ("FedX", FedXOptimizer(fed))):
+        plan = opt.optimize(q)
+        rel, m = engine.execute(plan)
+        n = len(next(iter(rel.values()))) if rel else 0
+        print(f"\n-- {name} --")
+        show_plan(plan.root, fed)
+        print(f"answers={n}  OT={plan.optimization_ms:.1f}ms  "
+              f"NSS={plan.n_selected_sources}  NSQ={plan.n_subqueries}  "
+              f"NTT={m.transferred_tuples}  requests={m.requests}")
+
+    want = naive_evaluate(fed, q)
+    print(f"\ngold-standard answers: {len(want)} (both engines must match)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from repro.baselines.fedx import FedXOptimizer
+from repro.baselines.void_dp import VoidDPOptimizer
+from repro.baselines.hibiscus import HibiscusOptimizer
+
+__all__ = ["FedXOptimizer", "VoidDPOptimizer", "HibiscusOptimizer"]

@@ -1,0 +1,110 @@
+"""Fault-tolerant checkpointing (no orbax dependency).
+
+Design for 1000+ nodes:
+  * leaf-wise ``.npy`` shards under ``step_xxxx.tmp/`` then a single atomic
+    ``rename`` — a preempted writer never corrupts the latest checkpoint;
+  * a manifest with per-leaf CRC32s, verified on restore;
+  * keep-last-k GC;
+  * **elastic restore**: checkpoints store the *global* arrays (gathered per
+    leaf); restoring onto a different mesh re-shards via device_put with the
+    new topology's shardings, so scaling the data axis up/down between runs
+    is a no-op for correctness.
+
+Per-host sharded writes (each host persisting only its addressable shards)
+drop in by swapping ``_gather``/``device_put`` for per-shard IO keyed by
+(shard index, host); single-process CPU containers exercise the same paths.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+import zlib
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return [("/".join(str(getattr(k, "key", k)) for k in path), leaf)
+            for path, leaf in leaves], jax.tree.structure(tree)
+
+
+@dataclass
+class CheckpointManager:
+    directory: str
+    keep: int = 3
+
+    def __post_init__(self):
+        os.makedirs(self.directory, exist_ok=True)
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, tree, extra: dict | None = None) -> str:
+        named, _ = _flatten(tree)
+        tmp = os.path.join(self.directory, f"step_{step:08d}.tmp")
+        final = os.path.join(self.directory, f"step_{step:08d}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest = {"step": step, "time": time.time(), "leaves": {},
+                    "extra": extra or {}}
+        for i, (name, leaf) in enumerate(named):
+            arr = np.asarray(jax.device_get(leaf))
+            fn = f"leaf_{i:05d}.npy"
+            np.save(os.path.join(tmp, fn), arr)
+            manifest["leaves"][name] = {
+                "file": fn,
+                "crc": zlib.crc32(arr.tobytes()),
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+            }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        os.replace(tmp, final)  # atomic publish
+        self._gc()
+        return final
+
+    # -- restore --------------------------------------------------------------
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def all_steps(self) -> list[int]:
+        out = []
+        for d in os.listdir(self.directory):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def restore(self, step: int, like_tree, shardings=None) -> tuple[object, dict]:
+        """Restore into the structure of ``like_tree``; if ``shardings`` is
+        given (possibly for a different mesh), re-shard each leaf (elastic)."""
+        d = os.path.join(self.directory, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        named, treedef = _flatten(like_tree)
+        sh_leaves = None
+        if shardings is not None:
+            sh_named, _ = _flatten(shardings)
+            sh_leaves = dict(sh_named)
+        out = []
+        for name, like in named:
+            meta = manifest["leaves"][name]
+            arr = np.load(os.path.join(d, meta["file"]))
+            if zlib.crc32(arr.tobytes()) != meta["crc"]:
+                raise IOError(f"checkpoint corruption in {name}")
+            if sh_leaves is not None:
+                out.append(jax.device_put(arr, sh_leaves[name]))
+            else:
+                out.append(jax.numpy.asarray(arr))
+        tree = jax.tree.unflatten(treedef, out)
+        return tree, manifest["extra"]
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)

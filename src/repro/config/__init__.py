@@ -1,0 +1,19 @@
+from repro.config.base import (
+    ArchConfig,
+    MLAConfig,
+    MoEConfig,
+    SSMConfig,
+    ShapeConfig,
+    SHAPES,
+    reduced_config,
+)
+
+__all__ = [
+    "ArchConfig",
+    "MLAConfig",
+    "MoEConfig",
+    "SSMConfig",
+    "ShapeConfig",
+    "SHAPES",
+    "reduced_config",
+]

@@ -1,0 +1,27 @@
+"""Registry of assigned architectures (+ the paper's own federated-engine
+"architecture"). ``get_arch(id)`` returns the exact published config."""
+from __future__ import annotations
+
+from repro.config.base import ArchConfig
+
+_REGISTRY: dict[str, str] = {
+    "gemma3-12b": "repro.configs.gemma3_12b",
+    "qwen1.5-32b": "repro.configs.qwen1_5_32b",
+    "qwen3-14b": "repro.configs.qwen3_14b",
+    "qwen2-0.5b": "repro.configs.qwen2_0_5b",
+    "phi3.5-moe-42b-a6.6b": "repro.configs.phi3_5_moe",
+    "deepseek-v2-236b": "repro.configs.deepseek_v2_236b",
+    "falcon-mamba-7b": "repro.configs.falcon_mamba_7b",
+    "chameleon-34b": "repro.configs.chameleon_34b",
+    "jamba-1.5-large-398b": "repro.configs.jamba_1_5_large",
+    "whisper-tiny": "repro.configs.whisper_tiny",
+}
+
+ARCH_IDS = list(_REGISTRY)
+
+
+def get_arch(arch_id: str) -> ArchConfig:
+    import importlib
+
+    mod = importlib.import_module(_REGISTRY[arch_id])
+    return mod.CONFIG

@@ -1,0 +1,12 @@
+# The paper's primary contribution: Odyssey's federated statistics
+# (characteristic sets/pairs, entity summaries, Algorithm 1) and the
+# cost-based federated query optimizer built on them.
+from repro.core.characteristic_sets import CSStats, compute_characteristic_sets
+from repro.core.characteristic_pairs import CPStats, compute_characteristic_pairs
+
+__all__ = [
+    "CSStats",
+    "compute_characteristic_sets",
+    "CPStats",
+    "compute_characteristic_pairs",
+]

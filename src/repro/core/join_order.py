@@ -1,0 +1,282 @@
+"""Join ordering (paper §3.1 + §3.4 step ii).
+
+* Inside a star: the greedy recursive scheme of §3.1 — estimate the
+  cardinality of every (k-1)-subset with formula (1)/(2); the pattern missing
+  from the cheapest subset is executed last; recurse on the cheapest subset.
+* Across stars: stars collapse into meta-nodes; exact dynamic programming over
+  connected subsets, with cardinalities from CS/CP statistics and the §3.4
+  cost function (intermediate results + transfers).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from itertools import combinations
+
+import numpy as np
+
+from repro.core.cardinality import (
+    linked_star_cardinality_distinct,
+    linked_star_cardinality_estimate,
+    star_cardinality_distinct,
+    star_cardinality_estimate,
+)
+from repro.core.cost import CostModel
+from repro.core.decomposition import Edge, Star, StarGraph
+from repro.core.federation import FederatedStats
+from repro.core.source_selection import SourceSelection
+from repro.query.algebra import Const, TriplePattern, Var
+
+GENERIC_EDGE_SELECTIVITY = 1e-3  # fallback for non object->subject joins
+
+
+def _bound_object_factor(star: Star, preds: list[int], stats: FederatedStats,
+                         sources: list[int]) -> float:
+    """Extra selectivity for patterns with a constant object: 1/#distinct
+    objects of the predicate (uniformity only where CSs cannot help — the CS
+    statistics do not condition on object values)."""
+    f = 1.0
+    for tp in star.patterns:
+        if isinstance(tp.p, Const) and isinstance(tp.o, Const):
+            n_obj = 0
+            for s in sources:
+                cs = stats.cs[s]
+                rel = cs.relevant_cs(preds)
+                occ = sum(cs.occurrences(int(c), tp.p.tid) for c in rel)
+                n_obj = max(n_obj, occ)
+            f *= 1.0 / max(1.0, float(n_obj)) * max(1.0, float(len(sources)))
+            f = min(f, 1.0)
+    return f
+
+
+def star_cardinality(star: Star, stats: FederatedStats, sel: SourceSelection,
+                     distinct: bool, preds: list[int] | None = None) -> float:
+    """Cardinality of one star over its selected sources (formulas 1/2,
+    summed over sources — each entity lives in one source, footnote 4)."""
+    if preds is None:
+        preds = star.bound_preds()
+    srcs = sel.star_sources[star.idx]
+    total = 0.0
+    for s in srcs:
+        rel = sel.star_cs[star.idx].get(s)
+        cs = stats.cs[s]
+        if rel is None:
+            rel = cs.relevant_cs(preds)
+        else:
+            rel = np.intersect1d(rel, cs.relevant_cs(preds), assume_unique=False)
+        if distinct:
+            total += star_cardinality_distinct(cs, preds, rel)
+        else:
+            total += star_cardinality_estimate(cs, preds, rel)
+    if isinstance(star.subject, Const):
+        return min(total, 1.0) if distinct else total / max(1.0, total)
+    total *= _bound_object_factor(star, preds, stats, srcs)
+    return total
+
+
+def order_star_patterns(star: Star, stats: FederatedStats, sel: SourceSelection,
+                        distinct: bool) -> list[TriplePattern]:
+    """§3.1 greedy: drop the pattern absent from the cheapest (k-1)-subset."""
+    patterns = list(star.patterns)
+    bound = [tp for tp in patterns if isinstance(tp.p, Const)]
+    unbound = [tp for tp in patterns if not isinstance(tp.p, Const)]
+    if len(bound) <= 1:
+        return bound + unbound
+
+    order_tail: list[TriplePattern] = []
+    current = bound
+    while len(current) > 2:
+        best_sub = None
+        best_card = None
+        for sub in combinations(current, len(current) - 1):
+            preds = [tp.p.tid for tp in sub]
+            card = star_cardinality(star, stats, sel, distinct, preds)
+            if best_card is None or card < best_card:
+                best_card = card
+                best_sub = sub
+        dropped = [tp for tp in current if tp not in best_sub][0]
+        order_tail.append(dropped)
+        current = list(best_sub)
+    # order the final pair: cheaper single pattern first
+    c0 = star_cardinality(star, stats, sel, distinct, [current[0].p.tid])
+    c1 = star_cardinality(star, stats, sel, distinct, [current[1].p.tid])
+    first_two = current if c0 <= c1 else [current[1], current[0]]
+    return first_two + order_tail[::-1] + unbound
+
+
+def edge_selectivity(edge: Edge, graph: StarGraph, stats: FederatedStats,
+                     sel: SourceSelection, distinct: bool) -> float:
+    """Join selectivity of a star-link from CP statistics, aggregated over the
+    viable source pairs of the edge."""
+    if edge.generic or edge.pred is None:
+        return GENERIC_EDGE_SELECTIVITY
+    s1 = graph.stars[edge.src]
+    s2 = graph.stars[edge.dst]
+    p1 = s1.bound_preds()
+    p2 = s2.bound_preds()
+    links = 0.0
+    for a in sel.star_sources[edge.src]:
+        for b in sel.star_sources[edge.dst]:
+            cp = stats.cp_between(a, b)
+            if cp is None:
+                continue
+            if distinct:
+                links += linked_star_cardinality_distinct(cp, stats.cs[a], stats.cs[b], p1, p2, edge.pred)
+            else:
+                links += linked_star_cardinality_estimate(cp, stats.cs[a], stats.cs[b], p1, p2, edge.pred)
+    c1 = max(1.0, star_cardinality(s1, stats, sel, True))
+    c2 = max(1.0, star_cardinality(s2, stats, sel, True))
+    return min(1.0, links / (c1 * c2))
+
+
+# --------------------------------------------------------------------------
+# DP over meta-nodes
+# --------------------------------------------------------------------------
+
+@dataclass
+class JoinTree:
+    kind: str                      # "leaf" | "join"
+    stars: frozenset[int]
+    cardinality: float
+    cost: float
+    left: "JoinTree | None" = None
+    right: "JoinTree | None" = None
+    strategy: str = ""
+    sources: list[int] | None = None      # for leaves (merged => exclusive)
+
+    def leaf_order(self) -> list[int]:
+        if self.kind == "leaf":
+            return sorted(self.stars)
+        return self.left.leaf_order() + self.right.leaf_order()  # type: ignore[union-attr]
+
+
+def dp_join_order(
+    graph: StarGraph,
+    stats: FederatedStats,
+    sel: SourceSelection,
+    cost_model: CostModel | None = None,
+    distinct: bool = True,
+) -> JoinTree:
+    """Exact bitmask DP over connected star subsets (paper: "dynamic
+    programming becomes affordable" because #stars << #triple patterns).
+
+    Candidate plans per subset:
+      * exclusive-group leaf — every star served by the same single source:
+        the merged subquery runs remotely, only results ship (§3.4 subquery
+        optimization, folded into the DP);
+      * hash join of two subplans (both results at the engine);
+      * bind join of a subplan with a leaf-able right side (bindings shipped
+        out, matches shipped back — replaces the right leaf's transfer).
+    """
+    cm = cost_model or CostModel()
+    n = len(graph.stars)
+    star_card = [max(star_cardinality(s, stats, sel, distinct), 0.0) for s in graph.stars]
+    edge_sel = [edge_selectivity(e, graph, stats, sel, distinct) for e in graph.edges]
+
+    def subset_card(ss: frozenset[int]) -> float:
+        card = 1.0
+        for i in ss:
+            card *= max(star_card[i], 0.0)
+        counted: set[tuple[int, int, int | None]] = set()
+        for k, e in enumerate(graph.edges):
+            if e.src in ss and e.dst in ss:
+                key = (min(e.src, e.dst), max(e.src, e.dst), e.pred)
+                if key in counted:
+                    continue
+                counted.add(key)
+                card *= edge_sel[k]
+        return card
+
+    def exclusive(ss: frozenset[int]) -> int | None:
+        if not all(len(sel.star_sources[i]) == 1 for i in ss):
+            return None
+        srcs = {sel.star_sources[i][0] for i in ss}
+        return next(iter(srcs)) if len(srcs) == 1 else None
+
+    def is_connected(ss: frozenset[int]) -> bool:
+        if len(ss) == 1:
+            return True
+        seen = {next(iter(ss))}
+        frontier = list(seen)
+        while frontier:
+            cur = frontier.pop()
+            for e in graph.edges:
+                for a, b in ((e.src, e.dst), (e.dst, e.src)):
+                    if a == cur and b in ss and b not in seen:
+                        seen.add(b)
+                        frontier.append(b)
+        return seen == set(ss)
+
+    best: dict[frozenset[int], JoinTree] = {}
+    for i in range(n):
+        ss = frozenset([i])
+        card = star_card[i]
+        best[ss] = JoinTree("leaf", ss, card, cm.leaf_cost(card, sel.star_sources[i]),
+                            sources=list(sel.star_sources[i]))
+
+    for size in range(2, n + 1):
+        for combo in combinations(range(n), size):
+            ss = frozenset(combo)
+            cand: JoinTree | None = None
+            card = subset_card(ss)
+            # exclusive-group leaf candidate
+            excl = exclusive(ss)
+            if excl is not None and is_connected(ss):
+                cand = JoinTree("leaf", ss, card, cm.leaf_cost(card, [excl]),
+                                sources=[excl])
+            for k in range(1, size):
+                for sub in combinations(combo, k):
+                    a = frozenset(sub)
+                    b = ss - a
+                    if a not in best or b not in best:
+                        continue
+                    if not graph.connected(a, b) and n > 1:
+                        continue
+                    ta, tb = best[a], best[b]
+                    # hash join
+                    cost = ta.cost + tb.cost + cm.hash_join_cost(card)
+                    if cand is None or cost < cand.cost:
+                        cand = JoinTree("join", ss, card, cost, ta, tb, "hash")
+                    # bind join: right side must be dispatchable as one
+                    # subquery (a leaf — single star or exclusive group)
+                    if tb.kind == "leaf" and tb.sources:
+                        bcost = ta.cost + cm.bind_join_cost(ta.cardinality, card, tb.sources)
+                        if bcost < cand.cost:
+                            cand = JoinTree("join", ss, card, bcost, ta, tb, "bind")
+            if cand is not None:
+                prev = best.get(ss)
+                if prev is None or cand.cost < prev.cost:
+                    best[ss] = cand
+
+    full = frozenset(range(n))
+    if full in best:
+        return best[full]
+    # disconnected query: cartesian-combine components by ascending cardinality
+    comps = _components(graph)
+    trees = sorted((best[frozenset(c)] for c in comps), key=lambda t: t.cardinality)
+    tree = trees[0]
+    for t in trees[1:]:
+        card = tree.cardinality * t.cardinality
+        tree = JoinTree("join", tree.stars | t.stars, card,
+                        tree.cost + t.cost + cm.intermediate_weight * card,
+                        tree, t, "hash", None)
+    return tree
+
+
+def _components(graph: StarGraph) -> list[set[int]]:
+    n = len(graph.stars)
+    parent = list(range(n))
+
+    def find(x: int) -> int:
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for e in graph.edges:
+        a, b = find(e.src), find(e.dst)
+        if a != b:
+            parent[a] = b
+    comps: dict[int, set[int]] = {}
+    for i in range(n):
+        comps.setdefault(find(i), set()).add(i)
+    return list(comps.values())

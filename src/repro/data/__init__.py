@@ -1,0 +1,3 @@
+from repro.data.loader import TokenLoader
+
+__all__ = ["TokenLoader"]

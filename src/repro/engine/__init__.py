@@ -1,0 +1,3 @@
+from repro.engine.local import LocalEngine, ExecutionMetrics, naive_evaluate
+
+__all__ = ["LocalEngine", "ExecutionMetrics", "naive_evaluate"]

@@ -1,0 +1,412 @@
+"""Distributed federation executor: the paper's endpoint/engine architecture
+mapped onto a TPU mesh (DESIGN.md §2).
+
+Layout
+------
+* ``data`` axis  = federation endpoints (one source per data shard; the mesh
+  is the federation).
+* ``model`` axis = intra-endpoint parallelism: each source's triples are
+  **hash-partitioned by subject** across the model axis, so star-shaped
+  subqueries (subject joins) execute entirely shard-locally — the paper's
+  "subqueries evaluated at the endpoint" invariant, in SPMD form.
+* ``pod`` axis   = query-batch data parallelism (multi-pod dry-run).
+
+Cross-star joins exchange rows by join-key hash over the model axis
+(``all_to_all``) and/or gather the build side over the data axis
+(``all_gather``) — the *transferred tuples* of the paper are literally the
+collective bytes of this engine, which is what Odyssey's optimizer minimizes.
+
+All relations are bounded buffers (operators.py); overflow flags psum up to
+the host, which retries with doubled capacity.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+try:  # jax >= 0.6
+    from jax import shard_map as _shard_map
+
+    def shard_map(f, mesh, in_specs, out_specs):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                          check_vma=False)
+except (ImportError, TypeError):  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _legacy
+
+    def shard_map(f, mesh, in_specs, out_specs):
+        return _legacy(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                       check_rep=False)
+
+from repro.core.planner import JoinPlanNode, PhysicalPlan, PlanNode, SubqueryNode
+from repro.engine import operators as ops
+from repro.query.algebra import Const, TriplePattern, Var
+from repro.rdf.dataset import Federation
+
+
+@dataclass
+class DistRelation:
+    """Host handle to a device-sharded bounded relation."""
+
+    data: jax.Array          # (d, m, cap, C) int32
+    valid: jax.Array         # (d, m, cap) bool
+    overflow: jax.Array      # () bool
+    columns: list[str]       # var name per column
+    partitioned_by: str | None = None  # var whose hash partitions the model axis
+
+
+@dataclass
+class DistMetrics:
+    transferred_tuples: int = 0
+    collective_bytes: int = 0
+    overflowed: bool = False
+
+
+def _enc_pattern(tp: TriplePattern) -> list[int]:
+    s, p, o = tp.constants()
+    return [s if s is not None else -1, p if p is not None else -1,
+            o if o is not None else -1]
+
+
+class DistributedEngine:
+    """Executes PhysicalPlans on a (data, model) mesh.
+
+    ``cap`` bounds each operator's output rows *per shard*.
+    """
+
+    def __init__(self, fed: Federation, mesh: Mesh, cap: int = 2048,
+                 table_cap: int | None = None, partition_aware: bool = False):
+        # partition_aware: skip the model-axis gather of the build side when
+        # it is already hash-partitioned by the join key (§Perf optimization;
+        # baseline engines gather unconditionally)
+        self.partition_aware = partition_aware
+        self.fed = fed
+        self.mesh = mesh
+        self.cap = cap
+        self.d = mesh.shape["data"]
+        self.m = mesh.shape["model"]
+        assert len(fed.sources) <= self.d, "one endpoint per data shard"
+        if table_cap is None:
+            table_cap = 1
+            for src in fed.sources:
+                counts = np.bincount(src.table.s % self.m, minlength=self.m) if len(src.table) else np.zeros(1, np.int64)
+                table_cap = max(table_cap, int(counts.max()))
+            table_cap = int(2 ** np.ceil(np.log2(table_cap)))
+        self.table_cap = table_cap
+
+        tables = np.zeros((self.d, self.m, table_cap, 3), np.int32)
+        trow = np.zeros((self.d, self.m, table_cap), bool)
+        for sid, src in enumerate(fed.sources):
+            t = src.table
+            part = t.s % self.m
+            for mm in range(self.m):
+                rows = np.nonzero(part == mm)[0]
+                k = min(len(rows), table_cap)
+                tables[sid, mm, :k, 0] = t.s[rows[:k]]
+                tables[sid, mm, :k, 1] = t.p[rows[:k]]
+                tables[sid, mm, :k, 2] = t.o[rows[:k]]
+                trow[sid, mm, :k] = True
+        sh = NamedSharding(mesh, P("data", "model"))
+        self.tables = jax.device_put(jnp.asarray(tables), sh)
+        self.trow = jax.device_put(jnp.asarray(trow), sh)
+        self._star_fns: dict[int, object] = {}
+        self._spec = P("data", "model")
+
+    # ------------------------------------------------------------------
+    # jitted SPMD steps
+    # ------------------------------------------------------------------
+    def _star_fn(self, n_pat: int):
+        """Scan + subject-join ``n_pat`` patterns of one star, shard-local.
+
+        Output columns: [subject, obj_0, ..., obj_{n_pat-1}].
+        """
+        if n_pat in self._star_fns:
+            return self._star_fns[n_pat]
+        cap = self.cap
+
+        def per_shard(tables, trow, patterns, source_on):
+            tables = tables.reshape(-1, 3)
+            trow = trow.reshape(-1) & source_on[0, 0]
+            rel, valid, ovf = ops.scan_pattern(tables, trow, patterns[0, 0, 0],
+                                               cap, (0, 2))
+            for k in range(1, n_pat):
+                nxt, nvalid, o2 = ops.scan_pattern(tables, trow, patterns[0, 0, k],
+                                                   cap, (0, 2))
+                rel, valid, o3 = ops.merge_join(rel, valid, 0, nxt, nvalid, 0, cap)
+                # drop duplicated subject col from right side (at ncols_left)
+                keep = list(range(rel.shape[1]))
+                keep.remove(k + 1)
+                rel = rel[:, keep]
+                ovf = ovf | o2 | o3
+            n = ops.count_valid(valid)
+            return rel[None, None], valid[None, None], ovf[None, None], n[None, None]
+
+        fn = shard_map(
+            per_shard, self.mesh,
+            in_specs=(P("data", "model"), P("data", "model"),
+                      P("data", "model"), P("data", "model")),
+            out_specs=(P("data", "model"), P("data", "model"),
+                       P("data", "model"), P("data", "model")),
+        )
+        jfn = jax.jit(fn)
+        self._star_fns[n_pat] = jfn
+        return jfn
+
+    def _exchange_fn(self, right_partitioned: bool = False):
+        """Repartition rows over the model axis by hash of a key column, then
+        merge-join against a local build side: the distributed hash join.
+
+        ``right_partitioned``: the build side is already hash-partitioned by
+        its join key over the model axis (true when joining a star on its
+        subject), so the model-axis gather is skipped — m× fewer build bytes
+        on the wire."""
+        key = ("exch", right_partitioned)
+        if key in self._star_fns:
+            return self._star_fns[key]
+        cap, m = self.cap, self.m
+
+        def per_shard(lrel, lvalid, rrel, rvalid, lkey, rkey):
+            lrel = lrel[0, 0]
+            lvalid = lvalid[0, 0]
+            rrel = rrel[0, 0]
+            rvalid = rvalid[0, 0]
+            ncols = lrel.shape[1]
+            # --- exchange left rows by key % m over the model axis ---------
+            keyv = jnp.take(lrel, lkey, axis=1)
+            dest = jnp.where(lvalid, keyv % m, m)  # m = drop bucket
+            bucket_cap = cap // m
+            order = jnp.argsort(dest, stable=True)
+            sorted_dest = dest[order]
+            idx_in_dest = jnp.arange(cap) - jnp.searchsorted(
+                sorted_dest, sorted_dest, side="left")
+            ovf = jnp.max(jnp.where(sorted_dest < m, idx_in_dest, 0)) >= bucket_cap
+            slot = jnp.clip(idx_in_dest, 0, bucket_cap - 1)
+            row_ok = (sorted_dest < m) & (idx_in_dest < bucket_cap)
+            tgt = jnp.where(row_ok, sorted_dest, m)  # OOB rows are dropped
+            send = jnp.zeros((m, bucket_cap, ncols), jnp.int32)
+            send = send.at[tgt, slot].set(lrel[order], mode="drop")
+            svalid = jnp.zeros((m, bucket_cap), bool)
+            svalid = svalid.at[tgt, slot].set(row_ok, mode="drop")
+            shipped = jnp.sum(svalid)
+            recv = jax.lax.all_to_all(send, "model", 0, 0, tiled=True)
+            vrecv = jax.lax.all_to_all(svalid, "model", 0, 0, tiled=True)
+            lrel2 = recv.reshape(-1, ncols)[:cap]
+            lvalid2 = vrecv.reshape(-1)[:cap]
+            # --- gather the build side across the federation ---------------
+            if right_partitioned:
+                # build rows already live on the model shard of their key:
+                # gather over sources (data) only — m× fewer bytes
+                rrel_g = jax.lax.all_gather(rrel, "data", tiled=True)
+                rvalid_g = jax.lax.all_gather(rvalid, "data", tiled=True)
+                shipped = shipped + jnp.sum(rvalid)
+            else:
+                rrel_g = jax.lax.all_gather(rrel, "model", tiled=True)
+                rvalid_g = jax.lax.all_gather(rvalid, "model", tiled=True)
+                rrel_g = jax.lax.all_gather(rrel_g, "data", tiled=True)
+                rvalid_g = jax.lax.all_gather(rvalid_g, "data", tiled=True)
+                shipped = shipped + jnp.sum(rvalid)
+                # keep only build rows whose key hashes to this model shard
+                my = jax.lax.axis_index("model")
+                rkeyv = jnp.take(rrel_g, rkey, axis=1)
+                rvalid_g = rvalid_g & ((rkeyv % m) == my)
+            out, ovalid, o2 = ops.merge_join(lrel2, lvalid2, lkey, rrel_g, rvalid_g,
+                                             rkey, cap)
+            shipped_total = jax.lax.psum(jax.lax.psum(shipped, "model"), "data")
+            ovf_any = jax.lax.psum(
+                jax.lax.psum((ovf | o2).astype(jnp.int32), "model"), "data") > 0
+            return (out[None, None], ovalid[None, None],
+                    ovf_any[None, None], shipped_total[None, None])
+
+        fn = shard_map(
+            per_shard, self.mesh,
+            in_specs=(P("data", "model"), P("data", "model"),
+                      P("data", "model"), P("data", "model"), P(), P()),
+            out_specs=(P("data", "model"), P("data", "model"),
+                       P("data", "model"), P("data", "model")),
+        )
+        self._star_fns[key] = jax.jit(fn)
+        return self._star_fns[key]
+
+    def _collect_fn(self, ncols: int):
+        """Gather a sharded relation to every shard (replicated result)."""
+        key = ("collect", ncols)
+        if key in self._star_fns:
+            return self._star_fns[key]
+
+        def per_shard(rel, valid):
+            rel = rel[0, 0]
+            valid = valid[0, 0]
+            rel_g = jax.lax.all_gather(rel, "model", tiled=True)
+            val_g = jax.lax.all_gather(valid, "model", tiled=True)
+            rel_g = jax.lax.all_gather(rel_g, "data", tiled=True)
+            val_g = jax.lax.all_gather(val_g, "data", tiled=True)
+            return rel_g[None, None], val_g[None, None]
+
+        fn = shard_map(
+            per_shard, self.mesh,
+            in_specs=(P("data", "model"), P("data", "model")),
+            out_specs=(P(None, None), P(None, None)),
+        )
+        self._star_fns[key] = jax.jit(fn)
+        return self._star_fns[key]
+
+    # ------------------------------------------------------------------
+    # plan execution
+    # ------------------------------------------------------------------
+    def _eval_star(self, node: SubqueryNode, metrics: DistMetrics) -> DistRelation:
+        assert len(node.stars) == 1, "merged leaves run on the exclusive path"
+        pats = [tp for tp in node.patterns if not isinstance(tp.p, Var)]
+        n_pat = len(pats)
+        enc = np.full((self.d, self.m, n_pat, 3), -1, np.int32)
+        for k, tp in enumerate(pats):
+            enc[:, :, k] = _enc_pattern(tp)
+        src_on = np.zeros((self.d, self.m), bool)
+        for s in node.sources:
+            src_on[s] = True
+        sh = NamedSharding(self.mesh, P("data", "model"))
+        rel, valid, ovf, n = self._star_fn(n_pat)(
+            self.tables, self.trow,
+            jax.device_put(jnp.asarray(enc), sh),
+            jax.device_put(jnp.asarray(src_on), sh),
+        )
+        metrics.overflowed |= bool(jax.device_get(ovf).any())
+        subj = pats[0].s.name if isinstance(pats[0].s, Var) else f"_c{id(node)}"
+        cols = [subj] + [tp.o.name if isinstance(tp.o, Var) else f"_o{k}"
+                         for k, tp in enumerate(pats)]
+        return DistRelation(rel, valid, ovf, cols, partitioned_by=subj)
+
+    def _eval_node(self, node: PlanNode, metrics: DistMetrics) -> DistRelation:
+        if isinstance(node, SubqueryNode):
+            if len(node.stars) == 1:
+                return self._eval_star(node, metrics)
+            # exclusive group ("single SPARQL query to one endpoint", §3.4):
+            # evaluate each star then join; rows stay within the source.
+            return self._join_merged_leaf(node, metrics)
+        assert isinstance(node, JoinPlanNode)
+        left = self._eval_node(node.left, metrics)
+        right = self._eval_node(node.right, metrics)
+        return self._join(left, right, node.join_vars, metrics)
+
+    def _join_merged_leaf(self, node: SubqueryNode, metrics: DistMetrics) -> DistRelation:
+        from repro.core.decomposition import decompose
+        from repro.query.algebra import BGPQuery
+
+        graph = decompose(BGPQuery(list(node.patterns)))
+        rels: list[DistRelation] = []
+        for star in graph.stars:
+            sub = SubqueryNode(stars=[0], patterns=star.patterns, sources=node.sources)
+            rels.append(self._eval_star(sub, metrics))
+        out = rels[0]
+        for r in rels[1:]:
+            jv = sorted(set(out.columns) & set(r.columns))
+            out = self._join(out, r, jv, metrics)
+        return out
+
+    def _join(self, left: DistRelation, right: DistRelation, join_vars: list[str],
+              metrics: DistMetrics) -> DistRelation:
+        assert join_vars, "cartesian joins not supported in the SPMD engine"
+        jv = join_vars[0]
+        lkey = left.columns.index(jv)
+        rkey = right.columns.index(jv)
+        right_part = self.partition_aware and right.partitioned_by == jv
+        rel, valid, ovf, shipped = self._exchange_fn(right_partitioned=right_part)(
+            left.data, left.valid, right.data, right.valid,
+            jnp.int32(lkey), jnp.int32(rkey))
+        metrics.overflowed |= bool(jax.device_get(ovf).any())
+        n_ship = int(jax.device_get(shipped).ravel()[0])
+        metrics.transferred_tuples += n_ship
+        metrics.collective_bytes += n_ship * 4 * (len(left.columns) + len(right.columns))
+        cols = left.columns + right.columns
+        # dedupe duplicated join columns by renaming right dup
+        seen: dict[str, int] = {}
+        final_cols = []
+        for c in cols:
+            if c in seen:
+                final_cols.append(f"{c}__dup{seen[c]}")
+                seen[c] += 1
+            else:
+                seen[c] = 1
+                final_cols.append(c)
+        out = DistRelation(rel, valid, ovf, final_cols, partitioned_by=jv)
+        # secondary join keys: filter equality host-side at collect (rare)
+        out._extra_eq = [(cols.index(v), len(left.columns) + right.columns.index(v))
+                         for v in join_vars[1:]]  # type: ignore[attr-defined]
+        return out
+
+    def execute(self, plan: PhysicalPlan) -> tuple[dict[str, np.ndarray], DistMetrics]:
+        metrics = DistMetrics()
+        rel = self._eval_node(plan.root, metrics)
+        data, valid = self._collect_fn(len(rel.columns))(rel.data, rel.valid)
+        data = np.asarray(jax.device_get(data)).reshape(-1, len(rel.columns))
+        valid = np.asarray(jax.device_get(valid)).reshape(-1)
+        rows = data[valid]
+        for (i, j) in getattr(rel, "_extra_eq", []):
+            rows = rows[rows[:, i] == rows[:, j]]
+        proj = plan.query.effective_projection()
+        out: dict[str, np.ndarray] = {}
+        for v in proj:
+            out[v] = rows[:, rel.columns.index(v)]
+        if plan.query.distinct and len(rows):
+            stacked = np.stack([out[v] for v in proj], axis=1)
+            _, idx = np.unique(stacked, axis=0, return_index=True)
+            out = {v: out[v][np.sort(idx)] for v in proj}
+        return out, metrics
+
+
+def _star_subject(tp: TriplePattern):
+    return tp.s
+
+
+# ---------------------------------------------------------------------------
+# dry-run lowering (no data, ShapeDtypeStructs only)
+# ---------------------------------------------------------------------------
+
+def fed_dryrun_lower(mesh: Mesh, cap: int = 8192, table_cap: int = 1 << 20,
+                     n_pat1: int = 3, n_pat2: int = 2, optimized: bool = False):
+    """Lower the canonical federated query step (two star scans + distributed
+    hash join + collect) on an abstract federation sized like FedBench-at-
+    scale: one endpoint per data shard, ``table_cap`` triples per (source,
+    model) shard. Returns the jax ``Lowered`` artifact.
+
+    On the multi-pod mesh the engine replicates across the ``pod`` axis
+    (independent query streams); tables and relations shard over
+    (data, model) exactly as single-pod.
+    """
+    eng = object.__new__(DistributedEngine)
+    eng.mesh = mesh
+    eng.cap = cap
+    eng.d = mesh.shape["data"]
+    eng.m = mesh.shape["model"]
+    eng.table_cap = table_cap
+    eng._star_fns = {}
+
+    d, m = eng.d, eng.m
+    sh = NamedSharding(mesh, P("data", "model"))
+    sds = jax.ShapeDtypeStruct
+    tables_s = sds((d, m, table_cap, 3), jnp.int32, sharding=sh)
+    trow_s = sds((d, m, table_cap), jnp.bool_, sharding=sh)
+    pat1_s = sds((d, m, n_pat1, 3), jnp.int32, sharding=sh)
+    pat2_s = sds((d, m, n_pat2, 3), jnp.int32, sharding=sh)
+    on_s = sds((d, m), jnp.bool_, sharding=sh)
+
+    star1 = eng._star_fn(n_pat1)
+    star2 = eng._star_fn(n_pat2)
+    # optimized: the right star joins on its own subject, which is exactly its
+    # model-axis partition key — skip the model gather of the build side
+    exchange = eng._exchange_fn(right_partitioned=optimized)
+    collect = eng._collect_fn(n_pat1 + 1 + n_pat2 + 1)
+
+    def fed_query_step(tables, trow, pat1, on1, pat2, on2):
+        r1, v1, o1, _ = star1(tables, trow, pat1, on1)
+        r2, v2, o2, _ = star2(tables, trow, pat2, on2)
+        out, ov, o3, shipped = exchange(r1, v1, r2, v2,
+                                        jnp.int32(1), jnp.int32(0))
+        rows, valid = collect(out, ov)
+        return rows, valid, (o1 | o2 | o3), shipped
+
+    return jax.jit(fed_query_step).lower(tables_s, trow_s, pat1_s, on_s,
+                                         pat2_s, on_s)

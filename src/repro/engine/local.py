@@ -1,0 +1,232 @@
+"""Host ("oracle") execution engine: exact, dynamically-shaped numpy
+evaluation of physical plans over a federation, with the paper's runtime
+metrics (NTT = tuples shipped endpoint->engine, requests, wall time).
+
+This is the reference the distributed JAX engine is tested against, and the
+executor behind the FedBench-style benchmarks (ET / NTT figures).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.planner import JoinPlanNode, PhysicalPlan, PlanNode, SubqueryNode
+from repro.query.algebra import BGPQuery, Const, TriplePattern, Var
+from repro.rdf.dataset import Federation, Source
+
+Relation = dict[str, np.ndarray]  # same-length columns keyed by var name
+
+
+def _empty(vars_: "list[str]") -> Relation:
+    return {v: np.zeros(0, np.int32) for v in vars_}
+
+
+def _nrows(rel: Relation) -> int:
+    if not rel:
+        return 0
+    return len(next(iter(rel.values())))
+
+
+def _concat(rels: "list[Relation]") -> Relation:
+    """Union of same-schema relations. Keeps the column structure even when
+    every input is empty — an empty-with-columns relation annihilates joins,
+    whereas the no-columns relation ``{}`` is the join identity."""
+    nonempty = [r for r in rels if _nrows(r)]
+    if not nonempty:
+        for r in rels:
+            if r:
+                return {k: v[:0] for k, v in r.items()}
+        return {}
+    keys = nonempty[0].keys()
+    return {k: np.concatenate([r[k] for r in nonempty]) for k in keys}
+
+
+def _dedup(rel: Relation) -> Relation:
+    n = _nrows(rel)
+    if n == 0:
+        return rel
+    keys = sorted(rel.keys())
+    stacked = np.stack([rel[k].astype(np.int64) for k in keys], axis=1)
+    _, idx = np.unique(stacked, axis=0, return_index=True)
+    return {k: rel[k][np.sort(idx)] for k in rel}
+
+
+@dataclass
+class ExecutionMetrics:
+    transferred_tuples: int = 0        # endpoint -> engine rows (NTT)
+    requests: int = 0                  # subquery dispatches
+    intermediate_rows: int = 0
+    wall_ms: float = 0.0
+    overflowed: bool = False
+
+
+class LocalEngine:
+    def __init__(self, fed: Federation):
+        self.fed = fed
+
+    # -- pattern / star evaluation at one endpoint ---------------------------
+    def _eval_pattern(self, src: Source, tp: TriplePattern,
+                      bindings: Relation | None = None) -> Relation:
+        s, p, o = tp.constants()
+        table = src.table
+        out_vars = [t.name for t in (tp.s, tp.p, tp.o) if isinstance(t, Var)]
+        if bindings is None or not any(
+            isinstance(t, Var) and t.name in bindings for t in (tp.s, tp.p, tp.o)
+        ):
+            rows = table.scan(s, p, o)
+            rel: Relation = {}
+            if isinstance(tp.s, Var):
+                rel[tp.s.name] = table.s[rows]
+            if isinstance(tp.p, Var):
+                rel[tp.p.name] = table.p[rows]
+            if isinstance(tp.o, Var):
+                rel[tp.o.name] = table.o[rows]
+            if bindings is not None:
+                return self._join(bindings, rel)
+            return rel
+        # bound evaluation: loop distinct relevant binding rows (bind join)
+        join_vars = [v for v in (tp.s, tp.p, tp.o)
+                     if isinstance(v, Var) and v.name in bindings]
+        jnames = [v.name for v in join_vars]
+        stacked = np.stack([bindings[v].astype(np.int64) for v in jnames], axis=1)
+        uniq = np.unique(stacked, axis=0)
+        parts: list[Relation] = []
+        for row in uniq:
+            bind = dict(zip(jnames, row.tolist()))
+            s2 = bind.get(tp.s.name, s) if isinstance(tp.s, Var) else s
+            p2 = bind.get(tp.p.name, p) if isinstance(tp.p, Var) else p
+            o2 = bind.get(tp.o.name, o) if isinstance(tp.o, Var) else o
+            rows = table.scan(s2, p2, o2)
+            rel = {}
+            if isinstance(tp.s, Var):
+                rel[tp.s.name] = table.s[rows] if tp.s.name not in bind else np.full(len(rows), bind[tp.s.name], np.int32)
+            if isinstance(tp.p, Var):
+                rel[tp.p.name] = table.p[rows] if tp.p.name not in bind else np.full(len(rows), bind[tp.p.name], np.int32)
+            if isinstance(tp.o, Var):
+                rel[tp.o.name] = table.o[rows] if tp.o.name not in bind else np.full(len(rows), bind[tp.o.name], np.int32)
+            parts.append(rel)
+        matches = _concat(parts) if parts else _empty(out_vars)
+        return self._join(bindings, matches)
+
+    # -- generic hash join ----------------------------------------------------
+    def _join(self, left: Relation, right: Relation) -> Relation:
+        if not left:
+            return right
+        if not right:
+            return left
+        shared = sorted(set(left) & set(right))
+        nl, nr = _nrows(left), _nrows(right)
+        if not shared:  # cartesian
+            li = np.repeat(np.arange(nl), nr)
+            ri = np.tile(np.arange(nr), nl)
+        else:
+            lk = np.stack([left[v].astype(np.int64) for v in shared], axis=1)
+            rk = np.stack([right[v].astype(np.int64) for v in shared], axis=1)
+            # sort-merge on packed keys
+            def pack(a: np.ndarray) -> np.ndarray:
+                h = np.zeros(len(a), np.int64)
+                for c in range(a.shape[1]):
+                    h = h * 1_000_003 + a[:, c]
+                return h
+            hl, hr = pack(lk), pack(rk)
+            order_r = np.argsort(hr, kind="stable")
+            hr_s = hr[order_r]
+            lo = np.searchsorted(hr_s, hl, side="left")
+            hi = np.searchsorted(hr_s, hl, side="right")
+            cnt = hi - lo
+            li = np.repeat(np.arange(nl), cnt)
+            ri_pos = np.concatenate([np.arange(l, h) for l, h in zip(lo, hi)]) if cnt.sum() else np.zeros(0, np.int64)
+            ri = order_r[ri_pos.astype(np.int64)]
+            if shared and len(li):
+                # guard against packed-hash collisions: verify equality
+                ok = np.ones(len(li), bool)
+                for v in shared:
+                    ok &= left[v][li] == right[v][ri]
+                li, ri = li[ok], ri[ok]
+        out: Relation = {}
+        for v in left:
+            out[v] = left[v][li]
+        for v in right:
+            if v not in out:
+                out[v] = right[v][ri]
+        return out
+
+    def _eval_subquery(self, node: SubqueryNode, metrics: ExecutionMetrics,
+                       bindings: Relation | None = None) -> Relation:
+        """Evaluate the (merged) star subquery at each selected endpoint and
+        union — intermediate joins happen remotely, only results ship."""
+        full_vars: set[str] = set()
+        for tp in node.patterns:
+            full_vars |= set(tp.variables())
+        if bindings:
+            full_vars |= set(bindings)
+        parts: list[Relation] = []
+        for sid in node.sources:
+            src = self.fed.sources[sid]
+            rel: Relation | None = bindings
+            for tp in node.patterns:
+                rel = self._eval_pattern(src, tp, rel)
+                if _nrows(rel) == 0 and rel:
+                    break
+            if rel is None or _nrows(rel) == 0:
+                rel = _empty(sorted(full_vars))
+            metrics.requests += 1
+            metrics.transferred_tuples += _nrows(rel)
+            parts.append(rel)
+        out = _concat(parts)
+        if not out:
+            return _empty(sorted(full_vars))
+        return out
+
+    def _execute(self, node: PlanNode, metrics: ExecutionMetrics) -> Relation:
+        if isinstance(node, SubqueryNode):
+            return self._eval_subquery(node, metrics)
+        assert isinstance(node, JoinPlanNode)
+        left = self._execute(node.left, metrics)
+        metrics.intermediate_rows += _nrows(left)
+        if node.strategy == "bind" and isinstance(node.right, SubqueryNode):
+            right_bound = self._eval_subquery(node.right, metrics, bindings=left)
+            metrics.intermediate_rows += _nrows(right_bound)
+            return right_bound
+        right = self._execute(node.right, metrics)
+        metrics.intermediate_rows += _nrows(right)
+        return self._join(left, right)
+
+    def execute(self, plan: PhysicalPlan) -> tuple[Relation, ExecutionMetrics]:
+        metrics = ExecutionMetrics()
+        t0 = time.perf_counter()
+        rel = self._execute(plan.root, metrics)
+        # query completion (§3.4 step iv): projection + DISTINCT
+        proj = plan.query.effective_projection()
+        rel = {v: rel.get(v, np.zeros(_nrows(rel), np.int32)) for v in proj}
+        if plan.query.distinct:
+            rel = _dedup(rel)
+        metrics.wall_ms = (time.perf_counter() - t0) * 1e3
+        return rel, metrics
+
+
+# --------------------------------------------------------------------------
+# Gold-standard evaluator: BGP over the union of all sources
+# --------------------------------------------------------------------------
+
+def naive_evaluate(fed: Federation, query: BGPQuery) -> set[tuple[int, ...]]:
+    from repro.rdf.dataset import TripleTable
+
+    s = np.concatenate([src.table.s for src in fed.sources])
+    p = np.concatenate([src.table.p for src in fed.sources])
+    o = np.concatenate([src.table.o for src in fed.sources])
+    table = TripleTable.from_triples(s, p, o)
+    union = Source("union", table)
+    eng = LocalEngine(Federation([union], fed.dictionary))
+    rel: Relation = {}
+    for tp in query.patterns:
+        nxt = eng._eval_pattern(union, tp, rel if rel else None)
+        rel = nxt
+        if _nrows(rel) == 0 and rel:
+            break
+    proj = query.effective_projection()
+    n = _nrows(rel)
+    cols = [rel.get(v, np.zeros(n, np.int32)) for v in proj]
+    return set(zip(*[c.tolist() for c in cols])) if n else set()

@@ -1,0 +1,3 @@
+from repro.ft.resilience import RetryPolicy, StragglerMitigator, Heartbeat
+
+__all__ = ["RetryPolicy", "StragglerMitigator", "Heartbeat"]

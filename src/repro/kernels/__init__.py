@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the statistics/engine hot spots.
+
+Each kernel has a pure-jnp oracle in ``ref.py`` and a jit'd public wrapper in
+``ops.py``. All kernels are validated in ``interpret=True`` mode on CPU and
+written with MXU/VPU-aligned block shapes for TPU as the target:
+
+  * ``sorted_intersect`` -- multiplicity-weighted intersection count of sorted
+    id lists (Algorithm 1's inner loop);
+  * ``seg_bitmap``      -- per-entity predicate bitmaps as a one-hot MXU
+    matmul (CS computation's segmented OR, re-thought for the MXU);
+  * ``join_count``      -- per-probe-row match counts against a sorted build
+    side (bounded-buffer join sizing in the distributed engine);
+  * ``summary_probe``   -- batched bitset AND + popcount between entity
+    summaries (candidate federated-CP pruning).
+"""

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every kernel (the correctness contract)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sorted_intersect_weighted_ref(a, aw, b, bw) -> jax.Array:
+    eq = a[:, None] == b[None, :]
+    return jnp.sum(jnp.where(eq, aw[:, None] * bw[None, :], 0), dtype=jnp.int32)
+
+
+def seg_bitmap_ref(seg, bucket, n_seg, n_buckets=128) -> jax.Array:
+    """(n_seg, n_buckets) float32 counts of (segment, bucket) pairs."""
+    valid = seg >= 0
+    seg_oh = (seg[:, None] == jnp.arange(n_seg)[None, :]) & valid[:, None]
+    bkt_oh = bucket[:, None] == jnp.arange(n_buckets)[None, :]
+    return (seg_oh.astype(jnp.float32).T @ bkt_oh.astype(jnp.float32))
+
+
+def join_count_ref(probe, build, build_w) -> jax.Array:
+    eq = probe[:, None] == build[None, :]
+    return jnp.sum(jnp.where(eq, build_w[None, :], 0), axis=1).astype(jnp.int32)
+
+
+def popcount32_ref(v) -> jax.Array:
+    s = jax.lax.shift_right_logical
+    v = v - (s(v, 1) & 0x55555555)
+    v = (v & 0x33333333) + (s(v, 2) & 0x33333333)
+    v = (v + s(v, 4)) & 0x0F0F0F0F
+    return s(v * 0x01010101, 24)
+
+
+def summary_probe_ref(a_sig, b_sig) -> jax.Array:
+    return popcount32_ref(a_sig[:, None, :] & b_sig[None, :, :]).sum(-1).astype(jnp.int32)
+
+
+def ssm_scan_ref(dt, bt, ct, x, a) -> jax.Array:
+    """Selective-scan oracle via associative scan (models/mamba.py math)."""
+    dA = jnp.exp(dt[..., None] * a)                          # (B,S,D,N)
+    dBx = (dt * x)[..., None] * bt[:, :, None, :]
+
+    def combine(l, r):
+        (a1, b1), (a2, b2) = l, r
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    return jnp.einsum("bsdn,bsn->bsd", h, ct)

@@ -1,0 +1,381 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production meshes, record memory/cost analysis + roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --mesh both \
+        --out results/dryrun.json
+
+The two lines above MUST stay the first statements in this module: jax locks
+the device count at first init, and only the dry-run may see 512 fake
+devices.
+"""
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from functools import partial  # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.config.base import SHAPES, ShapeConfig  # noqa: E402
+from repro.configs import ARCH_IDS, get_arch  # noqa: E402
+from repro.launch import roofline as RL  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import model as MDL  # noqa: E402
+from repro.models import sharding as SH  # noqa: E402
+from repro.train.optimizer import make_optimizer  # noqa: E402
+from repro.train.train_step import make_train_step  # noqa: E402
+
+
+def _cache_hlo(arch: str, shape: str, multi_pod: bool, optimized: bool,
+               hlo: str, default_trip: int) -> None:
+    """Persist compiled HLO (gzip) so analyzer improvements re-analyze
+    without recompiling (see --reanalyze)."""
+    import gzip
+
+    os.makedirs("results/hlo", exist_ok=True)
+    tag = f"{arch}__{shape}__{'multi' if multi_pod else 'single'}" \
+          f"{'__opt' if optimized else ''}"
+    with gzip.open(f"results/hlo/{tag}.hlo.gz", "wt") as f:
+        f.write(f"// default_trip={default_trip}\n")
+        f.write(hlo)
+
+
+def reanalyze(out_path: str) -> None:
+    """Recompute roofline terms from cached HLO into an existing results
+    json (after analyzer refinements)."""
+    import gzip
+    import re as _re
+
+    with open(out_path) as f:
+        results = json.load(f)
+    for key, r in results.items():
+        if r.get("status") != "ok":
+            continue
+        a, s, m = key.split("|")
+        tag = f"{a}__{s}__{m}{'__opt' if out_path.endswith('_opt.json') else ''}"
+        path = f"results/hlo/{tag}.hlo.gz"
+        if not os.path.exists(path):
+            continue
+        with gzip.open(path, "rt") as f:
+            text = f.read()
+        trip = int(_re.match(r"// default_trip=(\d+)", text).group(1))
+        costs = RL.analyze(text, default_trip=trip)
+        r["flops_per_dev"] = costs.flops
+        r["hbm_bytes_per_dev"] = costs.hbm_bytes
+        r["collective_bytes_per_dev"] = costs.collective_bytes
+        r["by_collective"] = costs.by_collective
+        r["compute_s"] = costs.flops / RL.PEAK_FLOPS
+        r["memory_s"] = costs.hbm_bytes / RL.HBM_BW
+        r["collective_s"] = costs.collective_bytes / RL.ICI_BW
+        terms = {"compute": r["compute_s"], "memory": r["memory_s"],
+                 "collective": r["collective_s"]}
+        r["bottleneck"] = max(terms, key=terms.get)
+        ideal = r["model_flops_total"] / (r["n_chips"] * RL.PEAK_FLOPS)
+        actual = max(terms.values())
+        r["roofline_fraction"] = ideal / actual if actual else 0.0
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"reanalyzed {out_path}")
+
+
+def cell_skip_reason(arch_id: str, shape_name: str) -> str | None:
+    cfg = get_arch(arch_id)
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return "full attention is quadratic at 500k (DESIGN.md §4)"
+    return None
+
+
+def _opt_state_shardings(mesh, params_shape, p_shardings, opt_state_shape):
+    """Optimizer states: mirror parameter shardings where shapes match,
+    replicate factored/scalar states (they are tiny)."""
+    flat_params = {tuple(str(getattr(k, 'key', k)) for k, _ in []): None}
+    p_map = {}
+    for path, leaf in jax.tree_util.tree_leaves_with_path(params_shape):
+        p_map[tuple(str(getattr(k, "key", k)) for k in path)] = leaf.shape
+    sh_map = {}
+    for path, s in jax.tree_util.tree_leaves_with_path(p_shardings):
+        sh_map[tuple(str(getattr(k, "key", k)) for k in path)] = s
+
+    def spec_of(path, leaf):
+        keys = tuple(str(getattr(k, "key", k)) for k in path)
+        # strip leading optimizer-state keys ("m"/"v") and trailing factored
+        for start in range(len(keys)):
+            cand = keys[start:]
+            if cand in p_map and p_map[cand] == leaf.shape:
+                return sh_map[cand]
+            if cand[:-1] in p_map and p_map[cand[:-1]] == leaf.shape:
+                return sh_map[cand[:-1]]
+        return NamedSharding(mesh, P(*([None] * len(leaf.shape))))
+
+    return jax.tree_util.tree_map_with_path(spec_of, opt_state_shape)
+
+
+def optimized_flags(cfg, shape):
+    """Per-cell beyond-baseline switches (EXPERIMENTS.md §Perf)."""
+    from repro.config.base import PerfFlags
+
+    return PerfFlags(
+        chunked_attention=shape.kind != "decode",
+        attn_chunk=1024,
+        chunked_loss=shape.kind == "train",
+        loss_chunk=512,
+        mamba_chunk=512 if cfg.ssm is not None else 0,
+        mla_absorb=cfg.mla is not None,
+        seq_parallel=shape.kind != "decode",
+        kv_quant_int8=shape.kind == "decode" and cfg.mla is None,
+    )
+
+
+def lower_cell(arch_id: str, shape_name: str, multi_pod: bool,
+               optimized: bool = False) -> dict:
+    import dataclasses
+
+    cfg = get_arch(arch_id)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    dtype = jnp.bfloat16
+    if optimized:
+        cfg = dataclasses.replace(cfg, perf=optimized_flags(cfg, shape))
+        if cfg.perf.seq_parallel and shape.seq_len % mesh.shape["model"] == 0:
+            dp = SH.batch_spec(mesh, shape)[0]
+            sp_sharding = NamedSharding(mesh, P(dp, "model", None))
+
+            def policy(x, kind):
+                if kind == "residual" and x.ndim == 3 and x.shape[1] == shape.seq_len:
+                    return jax.lax.with_sharding_constraint(x, sp_sharding)
+                return x
+
+            MDL.set_activation_policy(policy)
+
+    params_shape = jax.eval_shape(
+        lambda k: MDL.init_params(cfg, k, dtype), jax.random.PRNGKey(0))
+    p_shardings = SH.param_shardings(cfg, mesh, params_shape)
+    batch_shapes = MDL.input_specs(cfg, shape, dtype)
+    bspec = SH.batch_spec(mesh, shape)
+    b_shardings = {}
+    for k, v in batch_shapes.items():
+        if v.ndim == 2:
+            b_shardings[k] = NamedSharding(mesh, bspec)
+        else:
+            b_shardings[k] = NamedSharding(mesh, P(bspec[0], None, "model"))
+
+    t0 = time.time()
+    if shape.kind == "train":
+        opt_name = "adafactor" if cfg.param_count() > 1e11 else "adamw"
+        opt = make_optimizer(opt_name)
+        opt_state_shape = jax.eval_shape(opt.init, params_shape)
+        o_shardings = _opt_state_shardings(mesh, params_shape, p_shardings,
+                                           opt_state_shape)
+        step = make_train_step(cfg, opt)
+        fn = jax.jit(step,
+                     in_shardings=(p_shardings, o_shardings, b_shardings),
+                     out_shardings=(p_shardings, o_shardings, None),
+                     donate_argnums=(0, 1))
+        lowered = fn.lower(params_shape, opt_state_shape, batch_shapes)
+        default_trip = MDL.group_structure(cfg)[1] or 1
+    elif shape.kind == "prefill":
+        def prefill(params, batch):
+            logits, _ = MDL.forward(cfg, params, batch)
+            return logits
+        vocab_ax = "model" if cfg.vocab % mesh.shape["model"] == 0 else None
+        fn = jax.jit(prefill, in_shardings=(p_shardings, b_shardings),
+                     out_shardings=NamedSharding(mesh, P(bspec[0], None, vocab_ax)))
+        lowered = fn.lower(params_shape, batch_shapes)
+        default_trip = MDL.group_structure(cfg)[1] or 1
+    else:  # decode
+        caches_shape = jax.eval_shape(
+            partial(MDL.init_decode_caches, cfg, shape.global_batch,
+                    shape.seq_len, dtype))
+        c_specs = SH.cache_specs(cfg, mesh, shape, caches_shape)
+        c_shardings = SH.to_shardings(mesh, c_specs)
+        tok_sh = NamedSharding(mesh, bspec)
+
+        def serve_step(params, caches, tokens, pos):
+            return MDL.decode_step(cfg, params, caches, tokens, pos)
+
+        fn = jax.jit(serve_step,
+                     in_shardings=(p_shardings, c_shardings, tok_sh, None),
+                     out_shardings=(None, c_shardings),
+                     donate_argnums=(1,))
+        tok_s = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+        pos_s = jax.ShapeDtypeStruct((), jnp.int32)
+        lowered = fn.lower(params_shape, caches_shape, tok_s, pos_s)
+        default_trip = MDL.group_structure(cfg)[1] or 1
+
+    compiled = lowered.compile()
+    MDL.set_activation_policy(None)
+    compile_s = time.time() - t0
+
+    try:
+        mem = compiled.memory_analysis()
+        mem_dict = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        }
+    except Exception as exc:  # pragma: no cover - backend specific
+        mem_dict = {"error": str(exc)}
+    try:
+        cost = compiled.cost_analysis() or {}
+    except Exception:  # pragma: no cover
+        cost = {}
+
+    hlo = compiled.as_text()
+    _cache_hlo(arch_id, shape_name, multi_pod, optimized, hlo, default_trip)
+    costs = RL.analyze(hlo, default_trip=default_trip)
+    # explicit per-device memory estimate from argument shardings
+    arg_bytes = 0
+    for leaf in jax.tree.leaves(params_shape):
+        arg_bytes += leaf.size * leaf.dtype.itemsize
+    per_dev_param_bytes = arg_bytes // n_chips
+
+    rf = RL.Roofline(
+        arch=arch_id, shape=shape_name,
+        mesh="2x16x16" if multi_pod else "16x16",
+        n_chips=n_chips,
+        flops_per_dev=costs.flops,
+        hbm_bytes_per_dev=costs.hbm_bytes,
+        collective_bytes_per_dev=costs.collective_bytes,
+        model_flops_total=RL.model_flops(cfg, shape),
+        xla_flops_reported=float(cost.get("flops", 0.0)),
+        xla_bytes_reported=float(cost.get("bytes accessed", 0.0)),
+        by_collective=costs.by_collective,
+        memory_per_dev_bytes=float(mem_dict.get("peak_bytes") or 0.0),
+        max_while_trip=costs.max_while_trip,
+    )
+    out = rf.to_dict()
+    out.update({
+        "status": "ok",
+        "compile_s": compile_s,
+        "memory_analysis": mem_dict,
+        "param_bytes_per_dev": per_dev_param_bytes,
+        "collective_counts": costs.collective_count,
+        "hlo_bytes": len(hlo),
+    })
+    return out
+
+
+def lower_fed_cell(multi_pod: bool, optimized: bool = False) -> dict:
+    """The paper's own system: canonical federated query step."""
+    from repro.engine.distributed import fed_dryrun_lower
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    lowered = fed_dryrun_lower(mesh, cap=8192, table_cap=1 << 20,
+                               optimized=optimized)
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+    hlo = compiled.as_text()
+    costs = RL.analyze(hlo, default_trip=1)
+    try:
+        cost = compiled.cost_analysis() or {}
+    except Exception:
+        cost = {}
+    rf = RL.Roofline(
+        arch="odyssey-fed", shape="fed_query",
+        mesh="2x16x16" if multi_pod else "16x16",
+        n_chips=mesh.size,
+        flops_per_dev=costs.flops,
+        hbm_bytes_per_dev=costs.hbm_bytes,
+        collective_bytes_per_dev=costs.collective_bytes,
+        model_flops_total=0.0,
+        xla_flops_reported=float(cost.get("flops", 0.0)),
+        xla_bytes_reported=float(cost.get("bytes accessed", 0.0)),
+        by_collective=costs.by_collective,
+        max_while_trip=costs.max_while_trip,
+    )
+    out = rf.to_dict()
+    out.update({"status": "ok", "compile_s": compile_s,
+                "collective_counts": costs.collective_count,
+                "hlo_bytes": len(hlo)})
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="arch id, 'all', or 'odyssey-fed'")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip cells already present in --out")
+    ap.add_argument("--optimized", action="store_true",
+                    help="apply the §Perf beyond-baseline flags")
+    ap.add_argument("--reanalyze", action="store_true",
+                    help="recompute terms from cached HLO, no compilation")
+    args = ap.parse_args()
+    if args.reanalyze:
+        reanalyze(args.out)
+        return
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results: dict[str, dict] = {}
+    if args.resume and os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    def save():
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+
+    cells = []
+    for mp in meshes:
+        for a in archs:
+            if a == "odyssey-fed":
+                cells.append((a, "fed_query", mp))
+                continue
+            for s in shapes:
+                cells.append((a, s, mp))
+        if args.arch == "all":
+            cells.append(("odyssey-fed", "fed_query", mp))
+
+    for (a, s, mp) in cells:
+        key = f"{a}|{s}|{'multi' if mp else 'single'}"
+        if args.resume and key in results and results[key].get("status") in ("ok", "skipped"):
+            continue
+        if a != "odyssey-fed":
+            reason = cell_skip_reason(a, s)
+            if reason:
+                results[key] = {"status": "skipped", "reason": reason,
+                                "arch": a, "shape": s}
+                save()
+                print(f"SKIP {key}: {reason}", flush=True)
+                continue
+        print(f"LOWER {key} ...", flush=True)
+        try:
+            if a == "odyssey-fed":
+                results[key] = lower_fed_cell(mp, optimized=args.optimized)
+            else:
+                results[key] = lower_cell(a, s, mp, optimized=args.optimized)
+            r = results[key]
+            print(f"  ok in {r['compile_s']:.1f}s: bottleneck={r['bottleneck']} "
+                  f"compute={r['compute_s']:.4f}s memory={r['memory_s']:.4f}s "
+                  f"collective={r['collective_s']:.4f}s", flush=True)
+        except Exception as exc:
+            results[key] = {"status": "error", "error": str(exc)[:2000],
+                            "trace": traceback.format_exc()[-2000:],
+                            "arch": a, "shape": s}
+            print(f"  ERROR {key}: {exc}", flush=True)
+        save()
+
+    n_ok = sum(1 for r in results.values() if r.get("status") == "ok")
+    n_err = sum(1 for r in results.values() if r.get("status") == "error")
+    n_skip = sum(1 for r in results.values() if r.get("status") == "skipped")
+    print(f"dryrun: {n_ok} ok, {n_skip} skipped, {n_err} errors", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Production mesh definitions.
+
+A FUNCTION, not a module-level constant — importing this module never touches
+jax device state (the dry-run pins the fake device count before first init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for the production mesh, have {len(devices)} "
+            "(the dry-run must set --xla_force_host_platform_device_count=512 "
+            "before any jax import)")
+    import numpy as np
+    from jax.sharding import Mesh
+
+    return Mesh(np.asarray(devices).reshape(shape), axes)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh over however many (fake) devices a test process has."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    n = int(np.prod(shape))
+    return Mesh(np.asarray(jax.devices()[:n]).reshape(shape), axes)

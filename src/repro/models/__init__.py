@@ -1,0 +1,18 @@
+from repro.models.model import (
+    init_params,
+    forward,
+    decode_step,
+    init_decode_caches,
+    input_specs,
+)
+from repro.models.sharding import param_shardings, batch_spec
+
+__all__ = [
+    "init_params",
+    "forward",
+    "decode_step",
+    "init_decode_caches",
+    "input_specs",
+    "param_shardings",
+    "batch_spec",
+]

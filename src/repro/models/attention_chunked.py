@@ -1,0 +1,81 @@
+"""Flash-style chunked attention in pure jnp (the dry-run lowering path).
+
+The naive formulation materializes (B, H, S, S) scores — 4.3e15 elements for
+chameleon prefill_32k, impossible on any chip. This implements the online-
+softmax algorithm as a double scan over (query chunks × key chunks) with a
+running (max, denom, accumulator) carry: peak activation is O(B·H·cq·ck).
+The inner body is checkpointed so backward recomputes per-tile scores instead
+of storing them (same trade flash attention makes).
+
+``repro.kernels.flash_attention`` is the Pallas TPU kernel with identical
+math; this module is what the 512-device dry-run lowers (interpret-mode
+Pallas inside SPMD scans is impractically slow to trace on CPU).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import NEG_INF
+
+
+def chunked_gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                          causal: bool, window: int = 0,
+                          q_chunk: int = 1024, k_chunk: int = 1024) -> jax.Array:
+    """q: (B, S, H, hd); k, v: (B, S, KV, hd) -> (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    cq = min(q_chunk, S)
+    ck = min(k_chunk, S)
+    nq = S // cq
+    nk = S // ck
+    assert S % cq == 0 and S % ck == 0
+    scale = hd ** -0.5
+
+    qc = q.reshape(B, nq, cq, KV, G, hd)
+    kc = k.reshape(B, nk, ck, KV, hd)
+    vc = v.reshape(B, nk, ck, KV, hd)
+
+    def q_block(qi, q_blk):
+        # q_blk: (B, cq, KV, G, hd)
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            k_blk = jax.lax.dynamic_index_in_dim(kc, kj, 1, keepdims=False)
+            v_blk = jax.lax.dynamic_index_in_dim(vc, kj, 1, keepdims=False)
+            s = jnp.einsum("bqkgd,bskd->bkgqs", q_blk, k_blk) * scale  # (B,KV,G,cq,ck)
+            s = s.astype(jnp.float32)
+            qpos = qi * cq + jnp.arange(cq)[:, None]
+            kpos = kj * ck + jnp.arange(ck)[None, :]
+            mask = jnp.zeros((cq, ck), jnp.float32)
+            if causal:
+                mask = jnp.where(kpos > qpos, NEG_INF, mask)
+            if window:
+                mask = jnp.where(qpos - kpos >= window, NEG_INF, mask)
+            s = s + mask
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            # Flash-2 style: p in the activation dtype for the PV matmul
+            # (halves the tile traffic), f32 accumulator via the dot itself
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p.astype(v_blk.dtype), v_blk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, cq), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, cq, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(jax.checkpoint(kv_step), (m0, l0, a0),
+                                      jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-20)[..., None]
+        # (B, KV, G, cq, hd) -> (B, cq, H, hd)
+        return jnp.moveaxis(out, 3, 1).reshape(B, cq, KV * G, hd)
+
+    outs = jax.lax.map(lambda args: q_block(*args),
+                       (jnp.arange(nq), jnp.moveaxis(qc, 1, 0)))
+    # outs: (nq, B, cq, H, hd) -> (B, S, H, hd)
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, H, hd)

@@ -1,0 +1,216 @@
+"""Shared transformer layers: RMSNorm, RoPE, GQA attention (global/local,
+qk-norm, bias), SwiGLU MLP. Functional style over dict-pytree params; every
+function takes the activation dtype from its inputs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ArchConfig
+
+NEG_INF = -1e9  # additive mask value (bf16-safe)
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * w
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd) (hd even); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs          # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :].astype(x.dtype)                 # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def init_attention(cfg: ArchConfig, key, dtype) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    scale = d ** -0.5
+    p = {
+        "wq": jax.random.normal(k1, (d, h * hd), dtype) * scale,
+        "wk": jax.random.normal(k2, (d, kv * hd), dtype) * scale,
+        "wv": jax.random.normal(k3, (d, kv * hd), dtype) * scale,
+        "wo": jax.random.normal(k4, (h * hd, d), dtype) * scale,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kv * hd,), dtype)
+        p["bv"] = jnp.zeros((kv * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _project_qkv(p: dict, cfg: ArchConfig, x: jax.Array, positions: jax.Array,
+                 use_rope: bool = True):
+    B = x.shape[0]
+    S = x.shape[1]
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(B, S, h, hd)
+    k = k.reshape(B, S, kv, hd)
+    v = v.reshape(B, S, kv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if use_rope and cfg.rope_theta > 0:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q: (B, Sq, H, hd), k: (B, Sk, KV, hd) -> (B, KV, G, Sq, Sk)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    return jnp.einsum("bqkgd,bskd->bkgqs", qg, k) / (hd ** 0.5)
+
+
+def gqa_output(w: jax.Array, v: jax.Array) -> jax.Array:
+    """w: (B, KV, G, Sq, Sk), v: (B, Sk, KV, hd) -> (B, Sq, H, hd)."""
+    B, KV, G, Sq, Sk = w.shape
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+    return out.reshape(B, Sq, KV * G, -1)
+
+
+def attention(p: dict, cfg: ArchConfig, x: jax.Array, *, local: bool,
+              causal: bool = True, positions: jax.Array | None = None) -> jax.Array:
+    """Full-sequence (training/prefill) attention."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    window = cfg.local_window if local else 0
+    if cfg.perf.chunked_attention and S > cfg.perf.attn_chunk:
+        # largest chunk <= attn_chunk that divides S (whisper's 1500-frame
+        # encoder doesn't divide 1024; fall back to naive if none >= 64)
+        c = cfg.perf.attn_chunk
+        while c >= 64 and S % c:
+            c //= 2
+        if S % c == 0 and c >= 64:
+            from repro.models.attention_chunked import chunked_gqa_attention
+
+            out = chunked_gqa_attention(q, k, v, causal=causal, window=window,
+                                        q_chunk=c, k_chunk=c).astype(x.dtype)
+            return out.reshape(B, S, -1) @ p["wo"]
+    scores = gqa_scores(q, k).astype(jnp.float32)
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    mask = jnp.zeros((S, S), jnp.float32)
+    if causal:
+        mask = jnp.where(j > i, NEG_INF, mask)
+    if window:
+        mask = jnp.where(i - j >= window, NEG_INF, mask)
+    w = jax.nn.softmax(scores + mask, axis=-1).astype(x.dtype)
+    out = gqa_output(w, v)
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
+def decode_positions(pos: jax.Array, B: int) -> jax.Array:
+    """pos: () shared or (B,) per-slot -> (B, 1) positions."""
+    if pos.ndim == 0:
+        return jnp.full((B, 1), pos, jnp.int32)
+    return pos[:, None].astype(jnp.int32)
+
+
+def cache_insert(cache: jax.Array, new: jax.Array, pos: jax.Array) -> jax.Array:
+    """Write new (B, 1, ...) at per-row (or shared) position along axis 1."""
+    if pos.ndim == 0:
+        return jax.lax.dynamic_update_slice_in_dim(
+            cache, new.astype(cache.dtype), pos, axis=1)
+    B = cache.shape[0]
+    return cache.at[jnp.arange(B), pos].set(new[:, 0].astype(cache.dtype))
+
+
+def _quant_kv(t: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """t: (B, 1, KV, hd) -> int8 values + per-(token, head) f32 scales."""
+    s = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1) / 127.0
+    s = jnp.maximum(s, 1e-8)
+    q = jnp.clip(jnp.round(t.astype(jnp.float32) / s[..., None]), -127, 127)
+    return q.astype(jnp.int8), s
+
+
+def attention_decode(p: dict, cfg: ArchConfig, x: jax.Array, cache: dict,
+                     pos: jax.Array, *, local: bool) -> tuple[jax.Array, dict]:
+    """One-token decode against a preallocated KV cache.
+
+    cache: {"k": (B, S_ctx, KV, hd), "v": same} (+ "k_scale"/"v_scale" when
+    the cache is int8-quantized); ``pos``: () int32 shared or (B,) per-slot —
+    the index the new token writes to; attends to [0, pos].
+    """
+    B = x.shape[0]
+    positions = decode_positions(pos, B)
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions)
+    if cfg.perf.kv_quant_int8:
+        kq, ks = _quant_kv(k_new)
+        vq, vs = _quant_kv(v_new)
+        cache = {
+            "k": cache_insert(cache["k"], kq, pos),
+            "v": cache_insert(cache["v"], vq, pos),
+            "k_scale": cache_insert(cache["k_scale"], ks, pos),
+            "v_scale": cache_insert(cache["v_scale"], vs, pos),
+        }
+        k = cache["k"].astype(x.dtype) * cache["k_scale"][..., None].astype(x.dtype)
+        v = cache["v"].astype(x.dtype) * cache["v_scale"][..., None].astype(x.dtype)
+    else:
+        k = cache_insert(cache["k"], k_new, pos)
+        v = cache_insert(cache["v"], v_new, pos)
+        cache = {"k": k, "v": v}
+    S_ctx = k.shape[1]
+    scores = gqa_scores(q, k).astype(jnp.float32)    # (B, KV, G, 1, S_ctx)
+    j = jnp.arange(S_ctx)[None, None, None, None, :]
+    pb = positions[:, 0][:, None, None, None, None]  # (B,1,1,1,1)
+    mask = jnp.where(j > pb, NEG_INF, 0.0)
+    if local and cfg.local_window:
+        mask = mask + jnp.where(pb - j >= cfg.local_window, NEG_INF, 0.0)
+    w = jax.nn.softmax(scores + mask, axis=-1).astype(x.dtype)
+    out = gqa_output(w, v).reshape(B, 1, -1) @ p["wo"]
+    return out, cache
+
+
+def attention_prefill(p: dict, cfg: ArchConfig, x: jax.Array, *, local: bool,
+                      positions: jax.Array | None = None
+                      ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Full-sequence causal attention that also returns the rope'd (k, v) for
+    seeding a decode cache (serving prefill path)."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    scores = gqa_scores(q, k).astype(jnp.float32)
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    mask = jnp.where(j > i, NEG_INF, 0.0)
+    if local and cfg.local_window:
+        mask = mask + jnp.where(i - j >= cfg.local_window, NEG_INF, 0.0)
+    w = jax.nn.softmax(scores + mask, axis=-1).astype(x.dtype)
+    out = gqa_output(w, v).reshape(B, S, -1) @ p["wo"]
+    return out, k, v
+
+
+def init_mlp(d: int, f: int, key, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": jax.random.normal(k1, (d, f), dtype) * d ** -0.5,
+        "wg": jax.random.normal(k2, (d, f), dtype) * d ** -0.5,
+        "wo": jax.random.normal(k3, (f, d), dtype) * f ** -0.5,
+    }
+
+
+def swiglu(p: dict, x: jax.Array) -> jax.Array:
+    return (jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])) @ p["wo"]

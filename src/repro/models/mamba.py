@@ -1,0 +1,136 @@
+"""Mamba-1 block (selective SSM): in-proj -> causal conv -> selective scan ->
+gated out-proj. Training/prefill uses an associative scan over the sequence;
+decode is the O(1) single-step recurrence on (conv window, SSM state)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ArchConfig
+
+
+def _dims(cfg: ArchConfig) -> tuple[int, int, int, int]:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or cfg.d_model // 16
+    return d_inner, s.d_state, s.d_conv, dt_rank
+
+
+def init_mamba(cfg: ArchConfig, key, dtype) -> dict:
+    d = cfg.d_model
+    d_inner, d_state, d_conv, dt_rank = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, 2 * d_inner), dtype) * s,
+        "conv_w": jax.random.normal(ks[1], (d_conv, d_inner), dtype) * 0.2,
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "x_proj": jax.random.normal(ks[2], (d_inner, dt_rank + 2 * d_state), dtype) * d_inner ** -0.5,
+        "dt_proj": jax.random.normal(ks[3], (dt_rank, d_inner), dtype) * dt_rank ** -0.5,
+        "dt_bias": jnp.zeros((d_inner,), dtype),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32), (d_inner, 1))),
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": jax.random.normal(ks[4], (d_inner, d), dtype) * d_inner ** -0.5,
+    }
+
+
+def _ssm_params(p: dict, cfg: ArchConfig, xc: jax.Array):
+    """xc: (B, S, d_inner) post-conv activations -> dt, B_t, C_t."""
+    _, d_state, _, dt_rank = _dims(cfg)
+    proj = xc @ p["x_proj"]                                  # (B, S, R+2N)
+    dt = jax.nn.softplus(proj[..., :dt_rank] @ p["dt_proj"] + p["dt_bias"])
+    B_t = proj[..., dt_rank: dt_rank + d_state]
+    C_t = proj[..., dt_rank + d_state:]
+    return dt.astype(jnp.float32), B_t.astype(jnp.float32), C_t.astype(jnp.float32)
+
+
+def _scan_chunk(p, dt, B_t, C_t, xc, h_in):
+    """Selective scan over one chunk given carry state h_in: (B, di, N)."""
+    A = -jnp.exp(p["A_log"])                                 # (d_inner, N)
+    dtA = dt[..., None] * A                                  # (B, c, di, N)
+    dA = jnp.exp(dtA)
+    dBx = (dt * xc.astype(jnp.float32))[..., None] * B_t[:, :, None, :]
+
+    def combine(a, b):
+        (a1, b1), (a2, b2) = a, b
+        return a1 * a2, b1 * a2 + b2
+
+    _, h_local = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    # carry-in propagated by the running product of dA
+    dA_cum = jnp.exp(jnp.cumsum(dtA, axis=1))
+    h = h_local + dA_cum * h_in[:, None]
+    y = jnp.einsum("bsdn,bsn->bsd", h, C_t) + p["D"] * xc.astype(jnp.float32)
+    return y, h[:, -1]
+
+
+def mamba_block(p: dict, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    """Full-sequence pass. x: (B, S, D)."""
+    B, S, D = x.shape
+    d_inner, d_state, d_conv, _ = _dims(cfg)
+    xz = x @ p["in_proj"]
+    xr, z = jnp.split(xz, 2, axis=-1)                        # (B, S, d_inner)
+    # causal depthwise conv
+    pad = jnp.pad(xr, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    xc = sum(pad[:, i: i + S] * p["conv_w"][i] for i in range(d_conv)) + p["conv_b"]
+    xc = jax.nn.silu(xc)
+
+    dt, B_t, C_t = _ssm_params(p, cfg, xc)
+    chunk = cfg.perf.mamba_chunk
+    if chunk and S > chunk and S % chunk == 0:
+        # chunked scan: O(B·c·di·N) peak instead of O(B·S·di·N)
+        nc = S // chunk
+
+        def body(h, i):
+            sl = lambda a: jax.lax.dynamic_slice_in_dim(a, i * chunk, chunk, 1)
+            y, h = _scan_chunk(p, sl(dt), sl(B_t), sl(C_t), sl(xc), h)
+            return h, y
+
+        h0 = jnp.zeros((B, d_inner, d_state), jnp.float32)
+        _, ys = jax.lax.scan(jax.checkpoint(body), h0, jnp.arange(nc))
+        y = jnp.moveaxis(ys, 0, 1).reshape(B, S, d_inner)
+    else:
+        h0 = jnp.zeros((B, d_inner, d_state), jnp.float32)
+        y, _ = _scan_chunk(p, dt, B_t, C_t, xc, h0)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ p["out_proj"]
+
+
+def mamba_prefill(p: dict, cfg: ArchConfig, x: jax.Array
+                  ) -> tuple[jax.Array, dict]:
+    """Full-sequence pass that also returns the decode cache after the last
+    token: {"conv": last d_conv-1 raw inputs, "state": final SSM state}."""
+    B, S, D = x.shape
+    d_inner, d_state, d_conv, _ = _dims(cfg)
+    xz = x @ p["in_proj"]
+    xr, z = jnp.split(xz, 2, axis=-1)
+    pad = jnp.pad(xr, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    xc = sum(pad[:, i: i + S] * p["conv_w"][i] for i in range(d_conv)) + p["conv_b"]
+    xc = jax.nn.silu(xc)
+    dt, B_t, C_t = _ssm_params(p, cfg, xc)
+    h0 = jnp.zeros((B, d_inner, d_state), jnp.float32)
+    y, h_last = _scan_chunk(p, dt, B_t, C_t, xc, h0)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    window = pad[:, -(d_conv - 1):] if d_conv > 1 else xr[:, :0]
+    return y @ p["out_proj"], {"conv": window, "state": h_last}
+
+
+def mamba_decode(p: dict, cfg: ArchConfig, x: jax.Array, cache: dict,
+                 ) -> tuple[jax.Array, dict]:
+    """Single-token step. cache: {"conv": (B, d_conv-1, d_inner),
+    "state": (B, d_inner, N)} — O(1) in context length."""
+    B = x.shape[0]
+    d_inner, d_state, d_conv, _ = _dims(cfg)
+    xz = x[:, 0] @ p["in_proj"]
+    xr, z = jnp.split(xz, 2, axis=-1)                        # (B, d_inner)
+    window = jnp.concatenate([cache["conv"], xr[:, None]], axis=1)  # (B, d_conv, di)
+    xc = jnp.einsum("bcd,cd->bd", window, p["conv_w"]) + p["conv_b"]
+    xc = jax.nn.silu(xc)
+    dt, B_t, C_t = _ssm_params(p, cfg, xc[:, None])
+    dt, B_t, C_t = dt[:, 0], B_t[:, 0], C_t[:, 0]
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt[..., None] * A)                          # (B, di, N)
+    state = cache["state"] * dA + (dt * xc.astype(jnp.float32))[..., None] * B_t[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", state, C_t) + p["D"] * xc.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = (y @ p["out_proj"])[:, None]
+    return out, {"conv": window[:, 1:], "state": state}

@@ -1,0 +1,124 @@
+"""Multi-head Latent Attention (DeepSeek-V2): queries via a low-rank
+projection; keys/values decompressed from a 512-d shared latent; decoupled
+rope key. Decode caches only (latent, rope-key) per token — the paper-adjacent
+memory-roofline win for decode shapes."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ArchConfig
+from repro.models.layers import NEG_INF, rmsnorm, rope
+
+
+def init_mla(cfg: ArchConfig, key, dtype) -> dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 8)
+    s = d ** -0.5
+    return {
+        "wdq": jax.random.normal(ks[0], (d, m.q_lora), dtype) * s,
+        "q_norm": jnp.ones((m.q_lora,), dtype),
+        "wuq": jax.random.normal(ks[1], (m.q_lora, h * (m.nope_dim + m.rope_dim)), dtype) * m.q_lora ** -0.5,
+        "wdkv": jax.random.normal(ks[2], (d, m.kv_lora), dtype) * s,
+        "kv_norm": jnp.ones((m.kv_lora,), dtype),
+        "wkr": jax.random.normal(ks[3], (d, m.rope_dim), dtype) * s,
+        "wuk": jax.random.normal(ks[4], (m.kv_lora, h * m.nope_dim), dtype) * m.kv_lora ** -0.5,
+        "wuv": jax.random.normal(ks[5], (m.kv_lora, h * m.v_dim), dtype) * m.kv_lora ** -0.5,
+        "wo": jax.random.normal(ks[6], (h * m.v_dim, d), dtype) * (h * m.v_dim) ** -0.5,
+    }
+
+
+def _mla_qkv(p: dict, cfg: ArchConfig, x: jax.Array, positions: jax.Array):
+    m = cfg.mla
+    B, S, _ = x.shape
+    h = cfg.n_heads
+    q = rmsnorm(x @ p["wdq"], p["q_norm"], cfg.norm_eps) @ p["wuq"]
+    q = q.reshape(B, S, h, m.nope_dim + m.rope_dim)
+    q_nope, q_rope = q[..., : m.nope_dim], q[..., m.nope_dim:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    latent = rmsnorm(x @ p["wdkv"], p["kv_norm"], cfg.norm_eps)      # (B, S, kv_lora)
+    k_rope = rope((x @ p["wkr"])[:, :, None, :], positions, cfg.rope_theta)  # (B,S,1,r)
+    return q_nope, q_rope, latent, k_rope
+
+
+def _mla_attend(p, cfg, q_nope, q_rope, latent, k_rope, mask):
+    """Attention given (possibly cached) latent + rope keys."""
+    m = cfg.mla
+    B, S, h, _ = q_nope.shape
+    T = latent.shape[1]
+    k_nope = (latent @ p["wuk"]).reshape(B, T, h, m.nope_dim)
+    v = (latent @ p["wuv"]).reshape(B, T, h, m.v_dim)
+    scores = (jnp.einsum("bqhd,bthd->bhqt", q_nope, k_nope)
+              + jnp.einsum("bqhr,btxr->bhqt", q_rope, k_rope))
+    scores = scores.astype(jnp.float32) / ((m.nope_dim + m.rope_dim) ** 0.5)
+    w = jax.nn.softmax(scores + mask, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhqt,bthd->bqhd", w, v).reshape(B, S, h * m.v_dim)
+    return out @ p["wo"]
+
+
+def mla_attention(p: dict, cfg: ArchConfig, x: jax.Array,
+                  positions: jax.Array | None = None) -> jax.Array:
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q_nope, q_rope, latent, k_rope = _mla_qkv(p, cfg, x, positions)
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    mask = jnp.where(j > i, NEG_INF, 0.0)
+    return _mla_attend(p, cfg, q_nope, q_rope, latent, k_rope, mask)
+
+
+def mla_prefill(p: dict, cfg: ArchConfig, x: jax.Array,
+                positions: jax.Array | None = None
+                ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Full-sequence MLA that also returns (latent, k_rope) for the decode
+    cache."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q_nope, q_rope, latent, k_rope = _mla_qkv(p, cfg, x, positions)
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    mask = jnp.where(j > i, NEG_INF, 0.0)
+    out = _mla_attend(p, cfg, q_nope, q_rope, latent, k_rope, mask)
+    return out, latent, k_rope
+
+
+def mla_decode(p: dict, cfg: ArchConfig, x: jax.Array, cache: dict,
+               pos: jax.Array) -> tuple[jax.Array, dict]:
+    """cache: {"latent": (B, S_ctx, kv_lora), "k_rope": (B, S_ctx, 1, rope)}"""
+    from repro.models.layers import cache_insert, decode_positions
+
+    B = x.shape[0]
+    positions = decode_positions(pos, B)
+    q_nope, q_rope, latent_new, k_rope_new = _mla_qkv(p, cfg, x, positions)
+    latent = cache_insert(cache["latent"], latent_new, pos)
+    k_rope = cache_insert(cache["k_rope"], k_rope_new, pos)
+    T = latent.shape[1]
+    pb = positions[:, 0][:, None, None, None]        # (B,1,1,1)
+    mask = jnp.where(jnp.arange(T)[None, None, None, :] > pb, NEG_INF, 0.0)
+    if cfg.perf.mla_absorb:
+        out = _mla_attend_absorbed(p, cfg, q_nope, q_rope, latent, k_rope, mask)
+    else:
+        out = _mla_attend(p, cfg, q_nope, q_rope, latent, k_rope, mask)
+    return out, {"latent": latent, "k_rope": k_rope}
+
+
+def _mla_attend_absorbed(p, cfg, q_nope, q_rope, latent, k_rope, mask):
+    """Decode with the absorption trick: fold W_uk into the query and W_uv
+    into the output so attention runs *in latent space* — the per-token cache
+    is never re-expanded to per-head keys/values. FLOPs per step drop from
+    O(T·h·(nope+v)·kv_lora) to O(T·h·kv_lora) (~128× for DeepSeek-V2)."""
+    m = cfg.mla
+    B, S, h, _ = q_nope.shape
+    wuk_h = p["wuk"].reshape(m.kv_lora, h, m.nope_dim)
+    q_lat = jnp.einsum("bqhn,khn->bqhk", q_nope, wuk_h)        # (B,S,h,kv_lora)
+    scores = (jnp.einsum("bqhk,btk->bhqt", q_lat, latent)
+              + jnp.einsum("bqhr,btxr->bhqt", q_rope, k_rope))
+    scores = scores.astype(jnp.float32) / ((m.nope_dim + m.rope_dim) ** 0.5)
+    w = jax.nn.softmax(scores + mask, axis=-1).astype(latent.dtype)
+    o_lat = jnp.einsum("bhqt,btk->bqhk", w, latent)            # (B,S,h,kv_lora)
+    wuv_h = p["wuv"].reshape(m.kv_lora, h, m.v_dim)
+    out = jnp.einsum("bqhk,khv->bqhv", o_lat, wuv_h).reshape(B, S, h * m.v_dim)
+    return out @ p["wo"]

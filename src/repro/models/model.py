@@ -1,0 +1,485 @@
+"""Unified decoder-LM / enc-dec model over the arch zoo.
+
+Layers are grouped by the arch's repeating pattern and scanned with remat
+(``jax.lax.scan`` over stacked group params) so 48–72-layer configs lower to
+compact HLO. Heterogeneous patterns (gemma local/global, jamba mamba/attn/MoE
+interleaves) unroll *within* a group; irregular prelude layers (DeepSeek's
+first dense-FFN layer) stay outside the scan.
+
+Entry points:
+  init_params / forward (train & prefill) / decode_step / init_decode_caches /
+  input_specs (ShapeDtypeStructs for the dry-run).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ArchConfig, ShapeConfig
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+
+
+# ---------------------------------------------------------------------------
+# activation-sharding policy (set by the launcher/dry-run; model code stays
+# mesh-agnostic). kinds: "residual" (between blocks)
+# ---------------------------------------------------------------------------
+
+_ACT_POLICY = None
+
+
+def set_activation_policy(fn) -> None:
+    """fn(x, kind) -> x, e.g. a with_sharding_constraint for seq-parallel TP."""
+    global _ACT_POLICY
+    _ACT_POLICY = fn
+
+
+def _constrain(x: jax.Array, kind: str) -> jax.Array:
+    if _ACT_POLICY is None:
+        return x
+    return _ACT_POLICY(x, kind)
+
+
+# ---------------------------------------------------------------------------
+# structure
+# ---------------------------------------------------------------------------
+
+def group_structure(cfg: ArchConfig) -> tuple[list[int], int, int]:
+    """(prelude layer indices, n_groups, pattern_len)."""
+    prelude = list(range(cfg.moe.first_k_dense)) if cfg.moe else []
+    body = cfg.n_layers - len(prelude)
+    pat = cfg.pattern_len
+    if body % pat != 0:  # fall back to unscanned prelude remainder
+        extra = body % pat
+        prelude = prelude + list(range(len(prelude), len(prelude) + extra))
+        body -= extra
+    return prelude, body // pat, pat
+
+
+def _layer_kinds(cfg: ArchConfig, layer_idx: int) -> tuple[str, str]:
+    """(mixer kind, ffn kind) for an absolute layer index."""
+    mixer = cfg.mixer_of(layer_idx)
+    if cfg.d_ff == 0 and not (cfg.moe and cfg.ffn_is_moe(layer_idx)):
+        ffn = "none"
+    elif cfg.ffn_is_moe(layer_idx):
+        ffn = "moe"
+    else:
+        ffn = "dense"
+    return mixer, ffn
+
+
+def init_layer(cfg: ArchConfig, layer_idx: int, key, dtype) -> dict:
+    mixer, ffn = _layer_kinds(cfg, layer_idx)
+    k1, k2 = jax.random.split(key)
+    p: dict = {"mixer_norm": jnp.ones((cfg.d_model,), dtype)}
+    if mixer == "m":
+        p["mixer"] = M.init_mamba(cfg, k1, dtype)
+    elif cfg.mla is not None:
+        p["mixer"] = MLA.init_mla(cfg, k1, dtype)
+    else:
+        p["mixer"] = L.init_attention(cfg, k1, dtype)
+    if ffn == "dense":
+        d_ff = cfg.moe.d_ff_dense if (cfg.moe and cfg.moe.d_ff_dense) else cfg.d_ff
+        p["ffn"] = L.init_mlp(cfg.d_model, d_ff, k2, dtype)
+        p["ffn_norm"] = jnp.ones((cfg.d_model,), dtype)
+    elif ffn == "moe":
+        p["ffn"] = MOE.init_moe(cfg, k2, dtype)
+        p["ffn_norm"] = jnp.ones((cfg.d_model,), dtype)
+    return p
+
+
+def _apply_layer(cfg: ArchConfig, lp: dict, layer_idx: int, x: jax.Array,
+                 positions: jax.Array | None) -> tuple[jax.Array, jax.Array]:
+    mixer, ffn = _layer_kinds(cfg, layer_idx)
+    h = L.rmsnorm(x, lp["mixer_norm"], cfg.norm_eps)
+    if mixer == "m":
+        h = M.mamba_block(lp["mixer"], cfg, h)
+    elif cfg.mla is not None:
+        h = MLA.mla_attention(lp["mixer"], cfg, h, positions)
+    else:
+        h = L.attention(lp["mixer"], cfg, h, local=(mixer == "l"), positions=positions)
+    x = x + h
+    aux = jnp.zeros((), jnp.float32)
+    if ffn == "dense":
+        x = x + L.swiglu(lp["ffn"], L.rmsnorm(x, lp["ffn_norm"], cfg.norm_eps))
+    elif ffn == "moe":
+        out, aux = MOE.moe_ffn(lp["ffn"], cfg, L.rmsnorm(x, lp["ffn_norm"], cfg.norm_eps))
+        x = x + out
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.bfloat16) -> dict:
+    prelude, n_groups, pat = group_structure(cfg)
+    keys = jax.random.split(key, 8)
+    p: dict = {"embed": jax.random.normal(keys[0], (cfg.vocab, cfg.d_model), dtype) * 0.02}
+    p["final_norm"] = jnp.ones((cfg.d_model,), dtype)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = jax.random.normal(keys[1], (cfg.d_model, cfg.vocab), dtype) * cfg.d_model ** -0.5
+
+    for li in prelude:
+        p[f"prelude_{li}"] = init_layer(cfg, li, jax.random.fold_in(keys[2], li), dtype)
+
+    if n_groups > 0:
+        def one_group(gkey):
+            base = len(prelude)
+            return {f"slot_{s}": init_layer(cfg, base + s, jax.random.fold_in(gkey, s), dtype)
+                    for s in range(pat)}
+        gs = [one_group(jax.random.fold_in(keys[3], g)) for g in range(n_groups)]
+        p["groups"] = jax.tree.map(lambda *xs: jnp.stack(xs), *gs)
+
+    if cfg.encdec:
+        ed: dict = {"pos": jax.random.normal(keys[4], (8192, cfg.d_model), dtype) * 0.02,
+                    "enc_pos": jax.random.normal(keys[5], (cfg.enc_seq, cfg.d_model), dtype) * 0.02,
+                    "enc_final_norm": jnp.ones((cfg.d_model,), dtype)}
+        for i in range(cfg.enc_layers):
+            k = jax.random.fold_in(keys[6], i)
+            ed[f"enc_{i}"] = {
+                "mixer_norm": jnp.ones((cfg.d_model,), dtype),
+                "mixer": L.init_attention(cfg, k, dtype),
+                "ffn_norm": jnp.ones((cfg.d_model,), dtype),
+                "ffn": L.init_mlp(cfg.d_model, cfg.d_ff, jax.random.fold_in(k, 1), dtype),
+            }
+        for i in range(cfg.n_layers):
+            k = jax.random.fold_in(keys[7], i)
+            ed[f"cross_{i}"] = {
+                "norm": jnp.ones((cfg.d_model,), dtype),
+                "attn": L.init_attention(cfg, k, dtype),
+            }
+        p["encdec"] = ed
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(cfg: ArchConfig, params: dict, batch: dict) -> jax.Array:
+    x = params["embed"][batch["tokens"]]
+    if cfg.vlm_prefix and "patch_embeds" in batch:
+        pe = batch["patch_embeds"].astype(x.dtype)
+        x = jnp.concatenate([pe, x[:, cfg.vlm_prefix:]], axis=1)
+    return x
+
+
+def _encoder(cfg: ArchConfig, params: dict, frames: jax.Array) -> jax.Array:
+    ed = params["encdec"]
+    x = frames.astype(params["embed"].dtype) + ed["enc_pos"][None, : frames.shape[1]]
+    for i in range(cfg.enc_layers):
+        lp = ed[f"enc_{i}"]
+        h = L.rmsnorm(x, lp["mixer_norm"], cfg.norm_eps)
+        x = x + L.attention(lp["mixer"], cfg, h, local=False, causal=False)
+        x = x + L.swiglu(lp["ffn"], L.rmsnorm(x, lp["ffn_norm"], cfg.norm_eps))
+    return L.rmsnorm(x, ed["enc_final_norm"], cfg.norm_eps)
+
+
+def _cross_attention(cfg: ArchConfig, cp: dict, x: jax.Array, enc: jax.Array) -> jax.Array:
+    """Decoder cross-attention (bidirectional over encoder states)."""
+    p = cp["attn"]
+    B, S, _ = x.shape
+    T = enc.shape[1]
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (L.rmsnorm(x, cp["norm"], cfg.norm_eps) @ p["wq"]).reshape(B, S, h, hd)
+    k = (enc @ p["wk"]).reshape(B, T, kv, hd)
+    v = (enc @ p["wv"]).reshape(B, T, kv, hd)
+    scores = L.gqa_scores(q, k).astype(jnp.float32)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = L.gqa_output(w, v).reshape(B, S, -1) @ p["wo"]
+    return x + out
+
+
+def forward_hidden(cfg: ArchConfig, params: dict, batch: dict, remat: bool = True
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Final-norm hidden states (pre-head): (B, S, D), moe aux loss."""
+    if cfg.encdec:
+        return _forward_encdec_hidden(cfg, params, batch)
+    x = _embed_inputs(cfg, params, batch)
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+    aux = jnp.zeros((), jnp.float32)
+    prelude, n_groups, pat = group_structure(cfg)
+    for li in prelude:
+        x, a = _apply_layer(cfg, params[f"prelude_{li}"], li, x, positions)
+        aux += a
+
+    if n_groups > 0:
+        base = len(prelude)
+
+        def group_body(carry, gp):
+            x, aux = carry
+            for s in range(pat):
+                x, a = _apply_layer(cfg, gp[f"slot_{s}"], base + s, x, positions)
+                x = _constrain(x, "residual")
+                aux += a
+            return (x, aux), None
+
+        body = jax.checkpoint(group_body) if remat else group_body
+        (x, aux), _ = jax.lax.scan(body, (x, aux), params["groups"])
+
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux
+
+
+def lm_head(cfg: ArchConfig, params: dict) -> jax.Array:
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+def forward(cfg: ArchConfig, params: dict, batch: dict, remat: bool = True
+            ) -> tuple[jax.Array, jax.Array]:
+    """Returns (logits, moe_aux_loss)."""
+    x, aux = forward_hidden(cfg, params, batch, remat)
+    return x @ lm_head(cfg, params), aux
+
+
+def _forward_encdec_hidden(cfg: ArchConfig, params: dict, batch: dict):
+    enc = _encoder(cfg, params, batch["frames"])
+    ed = params["encdec"]
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    pos_table = ed["pos"]
+    x = params["embed"][tokens] + jnp.take(pos_table, jnp.arange(S) % pos_table.shape[0],
+                                           axis=0)[None]
+    aux = jnp.zeros((), jnp.float32)
+    prelude, n_groups, pat = group_structure(cfg)
+    # whisper decoder is shallow: unscanned, cross-attn interleaved
+    all_layers = prelude + [len(prelude) + g * pat + s
+                            for g in range(n_groups) for s in range(pat)]
+    for li in all_layers:
+        lp = params[f"prelude_{li}"] if li in prelude else jax.tree.map(
+            lambda v, g=(li - len(prelude)) // pat: v[g],
+            params["groups"])[f"slot_{(li - len(prelude)) % pat}"]
+        x, a = _apply_layer(cfg, lp, li, x, None)
+        aux += a
+        x = _cross_attention(cfg, ed[f"cross_{li}"], x, enc)
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def _init_layer_cache(cfg: ArchConfig, layer_idx: int, B: int, S_ctx: int, dtype):
+    mixer, _ = _layer_kinds(cfg, layer_idx)
+    if mixer == "m":
+        d_inner, d_state, d_conv, _ = M._dims(cfg)
+        return {"conv": jnp.zeros((B, d_conv - 1, d_inner), dtype),
+                "state": jnp.zeros((B, d_inner, d_state), jnp.float32)}
+    if cfg.mla is not None:
+        m = cfg.mla
+        return {"latent": jnp.zeros((B, S_ctx, m.kv_lora), dtype),
+                "k_rope": jnp.zeros((B, S_ctx, 1, m.rope_dim), dtype)}
+    if cfg.perf.kv_quant_int8:
+        return {"k": jnp.zeros((B, S_ctx, cfg.n_kv_heads, cfg.hd), jnp.int8),
+                "v": jnp.zeros((B, S_ctx, cfg.n_kv_heads, cfg.hd), jnp.int8),
+                "k_scale": jnp.zeros((B, S_ctx, cfg.n_kv_heads), jnp.float32),
+                "v_scale": jnp.zeros((B, S_ctx, cfg.n_kv_heads), jnp.float32)}
+    return {"k": jnp.zeros((B, S_ctx, cfg.n_kv_heads, cfg.hd), dtype),
+            "v": jnp.zeros((B, S_ctx, cfg.n_kv_heads, cfg.hd), dtype)}
+
+
+def init_decode_caches(cfg: ArchConfig, B: int, S_ctx: int, dtype=jnp.bfloat16) -> dict:
+    prelude, n_groups, pat = group_structure(cfg)
+    caches: dict = {}
+    for li in prelude:
+        caches[f"prelude_{li}"] = _init_layer_cache(cfg, li, B, S_ctx, dtype)
+    if n_groups > 0:
+        base = len(prelude)
+        one = {f"slot_{s}": _init_layer_cache(cfg, base + s, B, S_ctx, dtype)
+               for s in range(pat)}
+        caches["groups"] = jax.tree.map(
+            lambda v: jnp.broadcast_to(v[None], (n_groups,) + v.shape), one)
+    if cfg.encdec:
+        caches["enc_out"] = jnp.zeros((B, cfg.enc_seq, cfg.d_model), dtype)
+    return caches
+
+
+def _decode_layer(cfg: ArchConfig, lp: dict, cache: dict, layer_idx: int,
+                  x: jax.Array, pos: jax.Array) -> tuple[jax.Array, dict, jax.Array]:
+    mixer, ffn = _layer_kinds(cfg, layer_idx)
+    h = L.rmsnorm(x, lp["mixer_norm"], cfg.norm_eps)
+    if mixer == "m":
+        h, cache = M.mamba_decode(lp["mixer"], cfg, h, cache)
+    elif cfg.mla is not None:
+        h, cache = MLA.mla_decode(lp["mixer"], cfg, h, cache, pos)
+    else:
+        h, cache = L.attention_decode(lp["mixer"], cfg, h, cache, pos, local=(mixer == "l"))
+    x = x + h
+    aux = jnp.zeros((), jnp.float32)
+    if ffn == "dense":
+        x = x + L.swiglu(lp["ffn"], L.rmsnorm(x, lp["ffn_norm"], cfg.norm_eps))
+    elif ffn == "moe":
+        out, aux = MOE.moe_ffn(lp["ffn"], cfg, L.rmsnorm(x, lp["ffn_norm"], cfg.norm_eps))
+        x = x + out
+    return x, cache, aux
+
+
+def decode_step(cfg: ArchConfig, params: dict, caches: dict, tokens: jax.Array,
+                pos: jax.Array) -> tuple[jax.Array, dict]:
+    """One new token against a seq_len-sized cache (serve_step of the decode
+    shapes). tokens: (B, 1); pos: () int32."""
+    x = params["embed"][tokens]
+    prelude, n_groups, pat = group_structure(cfg)
+
+    if cfg.encdec:
+        # shallow enc-dec decoder: unscanned, cross-attention interleaved
+        ed = params["encdec"]
+        pos_table = ed["pos"]
+        posb = L.decode_positions(pos, x.shape[0])[:, 0]
+        x = x + jnp.take(pos_table, posb % pos_table.shape[0], axis=0)[:, None]
+        caches = dict(caches)
+        new_groups = jax.tree.map(lambda v: v, caches.get("groups", {}))
+        for li in range(cfg.n_layers):
+            if li in prelude:
+                lp = params[f"prelude_{li}"]
+                cache = caches[f"prelude_{li}"]
+            else:
+                g, s = (li - len(prelude)) // pat, (li - len(prelude)) % pat
+                lp = jax.tree.map(lambda v, g=g: v[g], params["groups"])[f"slot_{s}"]
+                cache = jax.tree.map(lambda v, g=g: v[g], new_groups)[f"slot_{s}"]
+            x, cache, _ = _decode_layer(cfg, lp, cache, li, x, pos)
+            x = _cross_attention(cfg, ed[f"cross_{li}"], x, caches["enc_out"])
+            if li in prelude:
+                caches[f"prelude_{li}"] = cache
+            else:
+                for key, v in cache.items():
+                    tgt = new_groups[f"slot_{s}"]
+                    tgt[key] = tgt[key].at[g].set(v)
+        if "groups" in caches:
+            caches["groups"] = new_groups
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        return x @ head, caches
+
+    for li in prelude:
+        x, caches[f"prelude_{li}"], _ = _decode_layer(
+            cfg, params[f"prelude_{li}"], caches[f"prelude_{li}"], li, x, pos)
+
+    if n_groups > 0:
+        base = len(prelude)
+
+        def group_body(x, gp_cache):
+            gp, gcache = gp_cache
+            new_cache = {}
+            for s in range(pat):
+                x, c, _ = _decode_layer(cfg, gp[f"slot_{s}"], gcache[f"slot_{s}"],
+                                        base + s, x, pos)
+                new_cache[f"slot_{s}"] = c
+            return x, new_cache
+
+        x, new_caches = jax.lax.scan(group_body, x, (params["groups"], caches["groups"]))
+        caches = dict(caches)
+        caches["groups"] = new_caches
+
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ head, caches
+
+
+# ---------------------------------------------------------------------------
+# serving prefill: run the prompt full-seq and seed the decode caches
+# ---------------------------------------------------------------------------
+
+def _prefill_layer(cfg: ArchConfig, lp: dict, layer_idx: int, x: jax.Array,
+                   positions, S_ctx: int, dtype) -> tuple[jax.Array, dict]:
+    mixer, ffn = _layer_kinds(cfg, layer_idx)
+    B, T, _ = x.shape
+    h = L.rmsnorm(x, lp["mixer_norm"], cfg.norm_eps)
+    if mixer == "m":
+        h, cache = M.mamba_prefill(lp["mixer"], cfg, h)
+    elif cfg.mla is not None:
+        h, latent, k_rope = MLA.mla_prefill(lp["mixer"], cfg, h, positions)
+        m = cfg.mla
+        cache = {
+            "latent": jnp.zeros((B, S_ctx, m.kv_lora), dtype).at[:, :T].set(
+                latent.astype(dtype)),
+            "k_rope": jnp.zeros((B, S_ctx, 1, m.rope_dim), dtype).at[:, :T].set(
+                k_rope.astype(dtype)),
+        }
+    else:
+        h, k, v = L.attention_prefill(lp["mixer"], cfg, h, local=(mixer == "l"),
+                                      positions=positions)
+        kvshape = (B, S_ctx, cfg.n_kv_heads, cfg.hd)
+        if cfg.perf.kv_quant_int8:
+            kq, ks = L._quant_kv(k)
+            vq, vs = L._quant_kv(v)
+            cache = {
+                "k": jnp.zeros(kvshape, jnp.int8).at[:, :T].set(kq),
+                "v": jnp.zeros(kvshape, jnp.int8).at[:, :T].set(vq),
+                "k_scale": jnp.zeros(kvshape[:3], jnp.float32).at[:, :T].set(ks),
+                "v_scale": jnp.zeros(kvshape[:3], jnp.float32).at[:, :T].set(vs),
+            }
+        else:
+            cache = {"k": jnp.zeros(kvshape, dtype).at[:, :T].set(k.astype(dtype)),
+                     "v": jnp.zeros(kvshape, dtype).at[:, :T].set(v.astype(dtype))}
+    x = x + h
+    if ffn == "dense":
+        x = x + L.swiglu(lp["ffn"], L.rmsnorm(x, lp["ffn_norm"], cfg.norm_eps))
+    elif ffn == "moe":
+        out, _ = MOE.moe_ffn(lp["ffn"], cfg, L.rmsnorm(x, lp["ffn_norm"], cfg.norm_eps))
+        x = x + out
+    return x, cache
+
+
+def prefill_with_caches(cfg: ArchConfig, params: dict, tokens: jax.Array,
+                        S_ctx: int, dtype=jnp.float32
+                        ) -> tuple[jax.Array, dict]:
+    """tokens: (B, T) prompt. Returns (last-token logits (B, 1, V), decode
+    caches positioned at T). Decoder-only path (enc-dec admits via its
+    encoder + token-by-token decode)."""
+    assert not cfg.encdec, "enc-dec prefill goes through the encoder"
+    B, T = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.arange(T)[None, :]
+    prelude, n_groups, pat = group_structure(cfg)
+    caches: dict = {}
+    for li in prelude:
+        x, caches[f"prelude_{li}"] = _prefill_layer(
+            cfg, params[f"prelude_{li}"], li, x, positions, S_ctx, dtype)
+
+    if n_groups > 0:
+        base = len(prelude)
+
+        def group_body(x, gp):
+            out_caches = {}
+            for s in range(pat):
+                x, c = _prefill_layer(cfg, gp[f"slot_{s}"], base + s, x,
+                                      positions, S_ctx, dtype)
+                out_caches[f"slot_{s}"] = c
+            return x, out_caches
+
+        x, group_caches = jax.lax.scan(group_body, x, params["groups"])
+        caches["groups"] = group_caches
+
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x[:, -1:] @ head, caches
+
+
+# ---------------------------------------------------------------------------
+# dry-run input specs
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, dtype=jnp.bfloat16) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        batch = {"tokens": sds((B, S), i32), "labels": sds((B, S), i32)}
+    elif shape.kind == "prefill":
+        batch = {"tokens": sds((B, S), i32)}
+    else:  # decode
+        batch = {"tokens": sds((B, 1), i32)}
+    if cfg.family == "vlm" and shape.kind != "decode":
+        batch["patch_embeds"] = sds((B, cfg.vlm_prefix, cfg.d_model), dtype)
+    if cfg.encdec and shape.kind != "decode":
+        batch["frames"] = sds((B, cfg.enc_seq, cfg.d_model), dtype)
+    return batch

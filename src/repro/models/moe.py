@@ -1,0 +1,81 @@
+"""Mixture-of-Experts FFN with sort-based dispatch.
+
+The GShard one-hot dispatch tensor is O(T·K·E·C) — hopeless at 1M-token
+batches. Production TPU MoE sorts (token, k) assignments by expert id,
+ranks within expert (capacity C ≈ cf·T·K/E), and scatters/gathers through an
+(E·C, D) buffer: O(T·K·D + E·C·D) memory, and under GSPMD the scatter from
+DP-sharded tokens into the EP-sharded expert buffers lowers to the expected
+all-to-all. Shared experts (DeepSeek) run densely for every token.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ArchConfig
+
+
+def init_moe(cfg: ArchConfig, key, dtype) -> dict:
+    m = cfg.moe
+    d = cfg.d_model
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    p = {
+        "router": jax.random.normal(k1, (d, m.n_experts), jnp.float32) * d ** -0.5,
+        "wi": jax.random.normal(k2, (m.n_experts, d, m.d_expert), dtype) * d ** -0.5,
+        "wg": jax.random.normal(k3, (m.n_experts, d, m.d_expert), dtype) * d ** -0.5,
+        "wo": jax.random.normal(k4, (m.n_experts, m.d_expert, d), dtype) * m.d_expert ** -0.5,
+    }
+    if m.n_shared:
+        ks = jax.random.split(k5, 3)
+        p["shared_wi"] = jax.random.normal(ks[0], (d, m.n_shared * m.d_expert), dtype) * d ** -0.5
+        p["shared_wg"] = jax.random.normal(ks[1], (d, m.n_shared * m.d_expert), dtype) * d ** -0.5
+        p["shared_wo"] = jax.random.normal(ks[2], (m.n_shared * m.d_expert, d), dtype) * (m.n_shared * m.d_expert) ** -0.5
+    return p
+
+
+def moe_ffn(p: dict, cfg: ArchConfig, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out, aux load-balance loss)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    K = m.top_k
+    E = m.n_experts
+    C = int(max(4, round(m.capacity_factor * T * K / E)))
+    xt = x.reshape(T, D)
+
+    logits = xt.astype(jnp.float32) @ p["router"]              # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)              # (T, K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # aux loss (Switch): density × mean router prob
+    density = jnp.zeros((E,), jnp.float32).at[gate_idx.reshape(-1)].add(1.0) / (T * K)
+    aux = (density * probs.mean(0)).sum() * E
+
+    # sort (token, k) pairs by expert, rank within expert
+    flat_e = gate_idx.reshape(-1)                              # (T·K,)
+    flat_t = jnp.arange(T * K, dtype=jnp.int32) // K
+    flat_w = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se = flat_e[order]
+    st = flat_t[order]
+    sw = flat_w[order]
+    rank = jnp.arange(T * K) - jnp.searchsorted(se, se, side="left")
+    ok = rank < C
+    slot = se * C + rank                                       # (T·K,)
+    tgt = jnp.where(ok, slot, E * C)                           # overflow -> dropped
+
+    buf = jnp.zeros((E * C, D), x.dtype).at[tgt].set(xt[st], mode="drop")
+    eb = buf.reshape(E, C, D)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", eb, p["wg"]))
+    h = h * jnp.einsum("ecd,edf->ecf", eb, p["wi"])
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["wo"]).reshape(E * C, D)
+
+    contrib = jnp.where(ok[:, None], out_e[jnp.clip(slot, 0, E * C - 1)], 0)
+    contrib = contrib * sw[:, None].astype(x.dtype)
+    out = jnp.zeros((T, D), x.dtype).at[st].add(contrib)
+
+    if m.n_shared:
+        sh = jax.nn.silu(xt @ p["shared_wg"]) * (xt @ p["shared_wi"])
+        out = out + sh @ p["shared_wo"]
+    return out.reshape(B, S, D), aux

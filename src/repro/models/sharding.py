@@ -1,0 +1,176 @@
+"""Sharding rules: parameter/cache/batch PartitionSpecs for the production
+meshes (Megatron-style TP over ``model``, optional FSDP over ``data``,
+DP over ``pod`` × ``data``; GSPMD padding absorbs non-divisible dims like
+qwen's 40 heads — noted in the roofline).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config.base import ArchConfig, ShapeConfig
+
+MODEL = "model"
+
+
+def _rule(path: str, shape: tuple[int, ...], fsdp: str | None) -> P:
+    """PartitionSpec for one parameter leaf (without the scan group dim)."""
+    nd = len(shape)
+    f = fsdp
+
+    def has(*names: str) -> bool:
+        return any(n in path for n in names)
+
+    if has("embed") and nd == 2:
+        return P(MODEL, None)
+    if has("lm_head"):
+        return P(None, MODEL)
+    if has("pos", "enc_pos") and nd == 2:
+        return P(None, None)
+    if has("router"):
+        return P(None, None)
+    # MoE experts: EP over the expert dim
+    if nd == 3 and has("ffn"):
+        if has("wo"):
+            return P(MODEL, None, f)
+        return P(MODEL, f, None)
+    if has("shared_wo"):
+        return P(MODEL, f)
+    if has("shared_wi", "shared_wg"):
+        return P(f, MODEL)
+    # MLA
+    if has("wdq", "wdkv"):
+        return P(f, None)
+    if has("wkr"):
+        return P(None, None)
+    if has("wuq", "wuk", "wuv"):
+        return P(None, MODEL)
+    # Mamba
+    if has("in_proj"):
+        return P(f, MODEL)
+    if has("conv_w"):
+        return P(None, MODEL)
+    if has("x_proj", "A_log", "out_proj") and nd == 2:
+        return P(MODEL, f if has("out_proj") else None)
+    if has("dt_proj"):
+        return P(None, MODEL)
+    if has("conv_b", "dt_bias") and nd == 1:
+        return P(MODEL)
+    if path.endswith("D") and nd == 1:
+        return P(MODEL)
+    # attention / dense mlp
+    if has("wq", "wk", "wv", "wi", "wg") and nd == 2:
+        return P(f, MODEL)
+    if has("wo") and nd == 2:
+        return P(MODEL, f)
+    if has("bq", "bk", "bv") and nd == 1:
+        return P(MODEL)
+    return P(*([None] * nd))  # norms, scalars
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", k)) for k in path)
+
+
+def _drop_indivisible(spec: P, shape: tuple[int, ...], mesh_sizes: dict | None) -> P:
+    """Explicitly-sharded jit arguments must divide evenly; drop axes that
+    don't (e.g. whisper's 51865 vocab over 16-way model)."""
+    if mesh_sizes is None:
+        return spec
+    out = []
+    for dim, axes in enumerate(tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if axes is None:
+            out.append(None)
+            continue
+        ax_tuple = axes if isinstance(axes, tuple) else (axes,)
+        size = 1
+        for a in ax_tuple:
+            size *= mesh_sizes.get(a, 1)
+        out.append(axes if shape[dim] % size == 0 else None)
+    return P(*out)
+
+
+def param_specs(cfg: ArchConfig, params_shape, fsdp: bool = True,
+                mesh_sizes: dict | None = None):
+    """Pytree of PartitionSpecs matching a params (shape-)pytree."""
+    f = "data" if fsdp else None
+
+    def spec_of(path, leaf):
+        ps = _path_str(path)
+        shape = leaf.shape
+        if "groups" in ps:  # scan-stacked: leading group dim unsharded
+            inner = _drop_indivisible(_rule(ps, shape[1:], f), shape[1:], mesh_sizes)
+            return P(*(None,) + tuple(inner))
+        return _drop_indivisible(_rule(ps, shape, f), shape, mesh_sizes)
+
+    return jax.tree_util.tree_map_with_path(spec_of, params_shape)
+
+
+def param_shardings(cfg: ArchConfig, mesh: Mesh, params_shape, fsdp: bool = True):
+    specs = param_specs(cfg, params_shape, fsdp, dict(mesh.shape))
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def batch_spec(mesh: Mesh, shape: ShapeConfig) -> P:
+    """Token batches shard over the DP axes (pod × data)."""
+    dp = dp_axes(mesh)
+    B = shape.global_batch
+    usable = []
+    size = 1
+    for a in dp:
+        if B % (size * mesh.shape[a]) == 0:
+            usable.append(a)
+            size *= mesh.shape[a]
+    return P(tuple(usable) if usable else None, None)
+
+
+def activation_spec(mesh: Mesh, shape: ShapeConfig) -> P:
+    dp = batch_spec(mesh, shape)[0]
+    return P(dp, None, MODEL)
+
+
+def cache_specs(cfg: ArchConfig, mesh: Mesh, shape: ShapeConfig, caches_shape):
+    """Decode-cache shardings: batch over DP axes when divisible, sequence
+    over the model axis (plus idle DP axes for tiny batches — long_500k's
+    B=1 spreads its 512k-token cache over every chip)."""
+    dp = batch_spec(mesh, shape)[0]            # tuple | None
+    idle = tuple(a for a in dp_axes(mesh) if dp is None or a not in dp)
+    seq_axes = idle + (MODEL,)                 # axes available for seq/feature
+
+    def spec_of(path, leaf):
+        ps = _path_str(path)
+        shape_ = leaf.shape
+        lead = ("groups" in ps)
+        nd = len(shape_) - (1 if lead else 0)
+        if "enc_out" in ps:
+            s = P(dp, None, MODEL)
+        elif "latent" in ps:                   # (B, S, kv_lora)
+            s = P(dp, seq_axes, None)
+        elif "k_rope" in ps:                   # (B, S, 1, rope)
+            s = P(dp, seq_axes, None, None)
+        elif "k_scale" in ps or "v_scale" in ps:  # (B, S, KV)
+            s = P(dp, seq_axes, None)
+        elif "conv" in ps and nd == 3:         # (B, d_conv-1, d_inner)
+            s = P(dp, None, seq_axes)
+        elif "state" in ps:                    # (B, d_inner, N)
+            s = P(dp, seq_axes, None)
+        elif nd == 4:                          # attention k/v (B, S, KV, hd)
+            s = P(dp, seq_axes, None, None)
+        else:
+            s = P(*([None] * nd))
+        if lead:
+            s = P(*((None,) + tuple(s)))
+        return s
+
+    return jax.tree_util.tree_map_with_path(spec_of, caches_shape)
+
+
+def to_shardings(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,4 @@
+from repro.query.algebra import Term, Var, Const, TriplePattern, BGPQuery
+from repro.query.sparql import parse_sparql
+
+__all__ = ["Term", "Var", "Const", "TriplePattern", "BGPQuery", "parse_sparql"]

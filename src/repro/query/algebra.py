@@ -1,0 +1,63 @@
+"""Minimal SPARQL BGP algebra: variables, triple patterns, conjunctive queries."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class Term:
+    pass
+
+
+@dataclass(frozen=True)
+class Var(Term):
+    name: str  # without leading '?'
+
+    def __repr__(self) -> str:
+        return f"?{self.name}"
+
+
+@dataclass(frozen=True)
+class Const(Term):
+    tid: int  # term-dictionary id
+
+    def __repr__(self) -> str:
+        return f"<{self.tid}>"
+
+
+@dataclass(frozen=True)
+class TriplePattern:
+    s: Term
+    p: Term
+    o: Term
+
+    def variables(self) -> frozenset[str]:
+        return frozenset(t.name for t in (self.s, self.p, self.o) if isinstance(t, Var))
+
+    def constants(self) -> tuple[int | None, int | None, int | None]:
+        """(s, p, o) with None where unbound — the engine's scan signature."""
+        return tuple(t.tid if isinstance(t, Const) else None for t in (self.s, self.p, self.o))  # type: ignore[return-value]
+
+    @property
+    def has_var_predicate(self) -> bool:
+        return isinstance(self.p, Var)
+
+
+@dataclass
+class BGPQuery:
+    patterns: list[TriplePattern]
+    distinct: bool = False
+    projection: list[str] = field(default_factory=list)  # empty => all vars
+    name: str = ""
+
+    def variables(self) -> frozenset[str]:
+        out: frozenset[str] = frozenset()
+        for tp in self.patterns:
+            out |= tp.variables()
+        return out
+
+    def effective_projection(self) -> list[str]:
+        return self.projection if self.projection else sorted(self.variables())
+
+    def __len__(self) -> int:
+        return len(self.patterns)

@@ -1,0 +1,58 @@
+"""A tiny SPARQL-subset parser: SELECT [DISTINCT] ?v ... WHERE { BGP }.
+
+Supports triple patterns over prefixed names / full IRIs / variables, '.'
+separators, and string literals. This keeps examples/readme snippets runnable
+without external dependencies; the optimizer itself consumes ``BGPQuery``.
+"""
+from __future__ import annotations
+
+import re
+
+from repro.query.algebra import BGPQuery, Const, TriplePattern, Var
+from repro.rdf.dictionary import TermDict, TermKind
+
+_TOKEN = re.compile(r"\?[A-Za-z_][\w]*|<[^>]*>|\"[^\"]*\"|[A-Za-z_][\w.\-]*:[\w.\-]*|[{}.]|SELECT|DISTINCT|WHERE", re.I)
+
+
+def parse_sparql(text: str, dictionary: TermDict) -> BGPQuery:
+    tokens = _TOKEN.findall(text)
+    i = 0
+
+    def expect(tok: str) -> None:
+        nonlocal i
+        if i >= len(tokens) or tokens[i].upper() != tok.upper():
+            raise ValueError(f"expected {tok!r} at token {i}: {tokens[max(0, i - 2): i + 3]}")
+        i += 1
+
+    expect("SELECT")
+    distinct = False
+    if i < len(tokens) and tokens[i].upper() == "DISTINCT":
+        distinct = True
+        i += 1
+    projection: list[str] = []
+    while i < len(tokens) and tokens[i].startswith("?"):
+        projection.append(tokens[i][1:])
+        i += 1
+    expect("WHERE")
+    expect("{")
+    patterns: list[TriplePattern] = []
+    terms: list = []
+    while i < len(tokens) and tokens[i] != "}":
+        tok = tokens[i]
+        i += 1
+        if tok == ".":
+            continue
+        if tok.startswith("?"):
+            terms.append(Var(tok[1:]))
+        elif tok.startswith("<"):
+            terms.append(Const(dictionary.add(tok[1:-1], TermKind.IRI)))
+        elif tok.startswith('"'):
+            terms.append(Const(dictionary.add(tok[1:-1], TermKind.LITERAL)))
+        else:  # prefixed name
+            terms.append(Const(dictionary.add(tok, TermKind.IRI)))
+        if len(terms) == 3:
+            patterns.append(TriplePattern(*terms))
+            terms = []
+    if terms:
+        raise ValueError("dangling terms in BGP")
+    return BGPQuery(patterns=patterns, distinct=distinct, projection=projection)

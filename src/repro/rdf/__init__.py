@@ -1,0 +1,15 @@
+from repro.rdf.dictionary import TermDict, TermKind
+from repro.rdf.dataset import TripleTable, Source, Federation
+from repro.rdf.generator import FederationSpec, SourceSpec, generate_federation, fedbench_like_spec
+
+__all__ = [
+    "TermDict",
+    "TermKind",
+    "TripleTable",
+    "Source",
+    "Federation",
+    "FederationSpec",
+    "SourceSpec",
+    "generate_federation",
+    "fedbench_like_spec",
+]

@@ -1,0 +1,134 @@
+"""Batched serving engine: continuous-batching-lite over the decode step.
+
+Requests join/leave a fixed slot grid (B slots × S_ctx cache); each engine
+step decodes one token for every active slot. Slot admission, greedy sampling,
+EOS retirement and per-request accounting live host-side; the device step is
+the jitted ``decode_step`` of the arch. This mirrors production TPU serving:
+a static-shaped device program + a tiny host scheduler.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import ArchConfig
+from repro.models import model as MDL
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int = 16
+    out: list[int] = field(default_factory=list)
+    slot: int = -1
+    done: bool = False
+    t_submit: float = 0.0
+    t_done: float = 0.0
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params, n_slots: int = 4,
+                 ctx_len: int = 128, eos: int | None = None,
+                 use_prefill: bool = False):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.ctx = ctx_len
+        self.eos = eos
+        # prefill admission: run the whole prompt in one full-seq pass and
+        # seed the slot's cache (decoder-only archs)
+        self.use_prefill = use_prefill and not cfg.encdec
+        self.caches = MDL.init_decode_caches(cfg, n_slots, ctx_len, jnp.float32)
+        self.pos = np.zeros(n_slots, np.int32)           # next write index
+        self.active: dict[int, Request] = {}             # slot -> request
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+        self._step = jax.jit(
+            lambda p, c, t, pos: MDL.decode_step(cfg, p, c, t, pos))
+        self._prefill = jax.jit(
+            lambda p, t: MDL.prefill_with_caches(cfg, p, t, ctx_len))
+
+    # -- host scheduler ------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        req.t_submit = time.perf_counter()
+        self.queue.append(req)
+
+    def _place_slot(self, slot: int, pre_caches) -> None:
+        """Copy a B=1 prefill cache into one slot of the batched caches.
+        Leaves under 'groups' carry a leading scan-group dim: batch is axis 1
+        there, axis 0 elsewhere."""
+        def place(path, c_all, c_pre):
+            in_groups = any(str(getattr(k, "key", k)) == "groups" for k in path)
+            if in_groups:
+                return c_all.at[:, slot].set(c_pre[:, 0].astype(c_all.dtype))
+            return c_all.at[slot].set(c_pre[0].astype(c_all.dtype))
+
+        self.caches = jax.tree_util.tree_map_with_path(place, self.caches,
+                                                       pre_caches)
+
+    def _admit(self) -> None:
+        free = [s for s in range(self.n_slots) if s not in self.active]
+        while free and self.queue:
+            slot = free.pop(0)
+            req = self.queue.pop(0)
+            req.slot = slot
+            self.active[slot] = req
+            self.pos[slot] = 0
+            if self.use_prefill and len(req.prompt) > 1:
+                toks = jnp.asarray([req.prompt], jnp.int32)
+                logits, pre = self._prefill(self.params, toks)
+                self._place_slot(slot, pre)
+                self.pos[slot] = len(req.prompt)
+                tok = int(jnp.argmax(logits[0, -1]))
+                req.out.append(tok)
+                if (len(req.out) >= req.max_new
+                        or (self.eos is not None and tok == self.eos)):
+                    req.done = True
+                    req.t_done = time.perf_counter()
+                    self.finished.append(req)
+                    del self.active[slot]
+                    free.insert(0, slot)
+
+    def step(self) -> None:
+        """Advance every active slot by one token."""
+        self._admit()
+        if not self.active:
+            return
+        toks = np.zeros((self.n_slots, 1), np.int32)
+        for slot, req in self.active.items():
+            consumed = int(self.pos[slot])
+            if consumed < len(req.prompt):
+                toks[slot, 0] = req.prompt[consumed]
+            else:
+                toks[slot, 0] = req.out[-1] if req.out else 0
+        # per-slot position vector: slots progress independently (idle slots
+        # write harmlessly at their own position 0 and are never read)
+        logits, self.caches = self._step(self.params, self.caches,
+                                         jnp.asarray(toks),
+                                         jnp.asarray(self.pos))
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        for slot, req in list(self.active.items()):
+            self.pos[slot] += 1
+            if self.pos[slot] >= len(req.prompt):
+                tok = int(nxt[slot])
+                req.out.append(tok)
+                if (len(req.out) >= req.max_new
+                        or (self.eos is not None and tok == self.eos)
+                        or self.pos[slot] >= self.ctx - 1):
+                    req.done = True
+                    req.t_done = time.perf_counter()
+                    self.finished.append(req)
+                    del self.active[slot]
+
+    def run_until_done(self, max_steps: int = 10_000) -> list[Request]:
+        steps = 0
+        while (self.queue or self.active) and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.finished

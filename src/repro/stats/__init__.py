@@ -1,0 +1,4 @@
+from repro.stats.void import VoidStats, compute_void
+from repro.stats.reduce import reduce_cs
+
+__all__ = ["VoidStats", "compute_void", "reduce_cs"]

@@ -1,0 +1,4 @@
+from repro.train.optimizer import adamw, adafactor, make_optimizer
+from repro.train.train_step import make_train_step, loss_fn
+
+__all__ = ["adamw", "adafactor", "make_optimizer", "make_train_step", "loss_fn"]

@@ -1,0 +1,48 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+Quantizes gradients to int8 (per-leaf max-abs scaling) before the data-
+parallel all-reduce; the quantization residual is carried to the next step
+(error feedback), which keeps SGD-style convergence. On the mesh this shrinks
+the DP all-reduce bytes 2×(bf16)/4×(fp32) — directly attacks the collective
+roofline term of gradient synchronization.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_grads(grads, error_fb):
+    """Returns (quantized pytree of (q, scale) pairs, new residuals)."""
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, s = quantize_int8(g32)
+        deq = dequantize_int8(q, s)
+        return (q, s), g32 - deq
+
+    leaves, treedef = jax.tree.flatten(grads)
+    eleaves = treedef.flatten_up_to(error_fb)
+    pairs = [one(g, e) for g, e in zip(leaves, eleaves)]
+    qtree = treedef.unflatten([p[0] for p in pairs])
+    etree = treedef.unflatten([p[1] for p in pairs])
+    return qtree, etree
+
+
+def decompress_grads(qtree):
+    def is_pair(x):
+        return isinstance(x, tuple) and len(x) == 2
+    return jax.tree.map(lambda qs: dequantize_int8(*qs), qtree, is_leaf=is_pair)

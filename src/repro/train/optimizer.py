@@ -1,0 +1,112 @@
+"""Optimizers (no external deps): AdamW and factored Adafactor.
+
+Adafactor's factored second moment keeps optimizer state ≈ O(rows + cols)
+instead of O(params) — the default for the ≥200B MoE archs so the multi-pod
+memory budget closes (DESIGN.md). States inherit the parameter shardings.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable     # (grads, state, params) -> (updates, state)
+    name: str = ""
+
+
+def adamw(lr: float = 1e-3, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0, state_dtype=jnp.float32) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m2 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v2 = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+            mhat = m2 / (1 - b1 ** t)
+            vhat = v2 / (1 - b2 ** t)
+            u = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+            return (-lr * u).astype(p.dtype), m2.astype(state_dtype), v2.astype(state_dtype)
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        updates = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"m": m, "v": v, "step": step}
+
+    return Optimizer(init, update, "adamw")
+
+
+def adafactor(lr: float = 1e-2, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0) -> Optimizer:
+    """Factored second-moment Adafactor (no momentum)."""
+
+    def _factored(shape) -> bool:
+        return len(shape) >= 2
+
+    def init(params):
+        def zeros(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"v": jax.tree.map(zeros, params,
+                                  is_leaf=lambda x: hasattr(x, "shape")),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        rho = 1.0 - t ** (-decay)
+
+        def upd(g, v, p):
+            g32 = g.astype(jnp.float32)
+            g2 = g32 * g32 + eps
+            if _factored(g.shape):
+                vr = rho * v["vr"] + (1 - rho) * g2.mean(axis=-1)
+                vc = rho * v["vc"] + (1 - rho) * g2.mean(axis=-2)
+                denom = (vr[..., None] * vc[..., None, :]) / jnp.maximum(
+                    vr.mean(axis=-1)[..., None, None], eps)
+                u = g32 * jax.lax.rsqrt(denom + eps)
+                nv = {"vr": vr, "vc": vc}
+            else:
+                nv = {"v": rho * v["v"] + (1 - rho) * g2}
+                u = g32 * jax.lax.rsqrt(nv["v"] + eps)
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return (-lr * u).astype(p.dtype), nv
+
+        leaves_g, treedef = jax.tree.flatten(grads)
+        leaves_v = treedef.flatten_up_to(state["v"])
+        leaves_p = treedef.flatten_up_to(params)
+        out = [upd(g, v, p) for g, v, p in zip(leaves_g, leaves_v, leaves_p)]
+        updates = treedef.unflatten([o[0] for o in out])
+        v = treedef.unflatten([o[1] for o in out])
+        return updates, {"v": v, "step": step}
+
+    return Optimizer(init, update, "adafactor")
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(**kw)
+    if name == "adafactor":
+        return adafactor(**kw)
+    raise ValueError(name)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)

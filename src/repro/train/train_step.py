@@ -1,0 +1,98 @@
+"""Training step factory: loss, grads (remat'd scan inside the model),
+optional microbatch gradient accumulation, optional int8 gradient compression
+with error feedback, optimizer update. Built for jit with explicit
+in/out_shardings by the launcher and the dry-run."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ArchConfig
+from repro.models import model as MDL
+from repro.train import grad_compress as GC
+from repro.train.optimizer import Optimizer, apply_updates
+
+
+def loss_fn(cfg: ArchConfig, params, batch, aux_weight: float = 0.01):
+    labels = batch["labels"]
+    if cfg.perf.chunked_loss:
+        # never materialize the (B, S, V) logits: scan sequence chunks and
+        # matmul against the head inside the (checkpointed) chunk body
+        x, aux = MDL.forward_hidden(cfg, params, batch)
+        head = MDL.lm_head(cfg, params)
+        B, S, D = x.shape
+        c = min(cfg.perf.loss_chunk, S)
+        nc = S // c
+
+        def body(acc, i):
+            xb = jax.lax.dynamic_slice_in_dim(x, i * c, c, 1)
+            lb = jax.lax.dynamic_slice_in_dim(labels, i * c, c, 1)
+            lg = (xb @ head).astype(jnp.float32)
+            logz = jax.nn.logsumexp(lg, axis=-1)
+            gold = jnp.take_along_axis(lg, lb[..., None], axis=-1)[..., 0]
+            return acc + (logz - gold).sum(), None
+
+        acc, _ = jax.lax.scan(jax.checkpoint(body), jnp.zeros((), jnp.float32),
+                              jnp.arange(nc))
+        nll = acc / (B * nc * c)
+        return nll + aux_weight * aux, (nll, aux)
+    logits, aux = MDL.forward(cfg, params, batch)
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (logz - gold).mean()
+    return nll + aux_weight * aux, (nll, aux)
+
+
+def make_train_step(cfg: ArchConfig, optimizer: Optimizer, microbatches: int = 1,
+                    compress: bool = False):
+    """Returns train_step(params, opt_state, batch [, error_fb]) ->
+    (params, opt_state, metrics [, error_fb])."""
+
+    grad_fn = jax.grad(lambda p, b: loss_fn(cfg, p, b)[0], has_aux=False)
+
+    def value_grad(params, batch):
+        (loss, (nll, aux)), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, params=p, batch=batch), has_aux=True)(params)
+        return loss, nll, aux, grads
+
+    def split_micro(batch, i):
+        return jax.tree.map(
+            lambda x: jax.lax.dynamic_slice_in_dim(
+                x, i * (x.shape[0] // microbatches), x.shape[0] // microbatches, 0),
+            batch)
+
+    def train_step(params, opt_state, batch, error_fb=None):
+        if microbatches == 1:
+            loss, nll, aux, grads = value_grad(params, batch)
+        else:
+            def body(carry, i):
+                acc = carry
+                mb = split_micro(batch, i)
+                loss, nll, aux, grads = value_grad(params, mb)
+                acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), acc, grads)
+                return acc, (loss, nll, aux)
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            acc, (losses, nlls, auxs) = jax.lax.scan(
+                body, zeros, jnp.arange(microbatches))
+            grads = jax.tree.map(lambda g: g / microbatches, acc)
+            loss, nll, aux = losses.mean(), nlls.mean(), auxs.mean()
+
+        if compress:
+            assert error_fb is not None
+            qtree, error_fb = GC.compress_grads(grads, error_fb)
+            grads = GC.decompress_grads(qtree)
+
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        metrics = {"loss": loss, "nll": nll, "moe_aux": aux, "grad_norm": gnorm}
+        if compress:
+            return params, opt_state, metrics, error_fb
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,32 @@
+import numpy as np
+import pytest
+
+from repro.core.federation import build_federated_stats
+from repro.rdf.generator import (
+    fedbench_like_spec,
+    generate_federation,
+    generate_workload,
+)
+
+
+@pytest.fixture(scope="session")
+def small_fed():
+    fed, gt = generate_federation(fedbench_like_spec(scale=0.2, seed=11))
+    return fed, gt
+
+
+@pytest.fixture(scope="session")
+def small_stats(small_fed):
+    fed, _ = small_fed
+    return build_federated_stats(fed)
+
+
+@pytest.fixture(scope="session")
+def workload(small_fed):
+    fed, gt = small_fed
+    return generate_workload(fed, gt, n_star=8, n_hybrid=8, n_path=4, seed=5)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

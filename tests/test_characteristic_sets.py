@@ -1,0 +1,87 @@
+"""CS statistics vs brute force (paper §3.1, Listing 1.1 semantics)."""
+import numpy as np
+import pytest
+
+from repro.core.characteristic_sets import compute_characteristic_sets
+from repro.rdf.dataset import TripleTable
+from repro.stats.reduce import reduce_cs
+
+
+def brute_force_cs(table: TripleTable):
+    """entity -> (pred set, {pred: triple count})"""
+    per_ent: dict[int, dict[int, int]] = {}
+    for s, p in zip(table.s.tolist(), table.p.tolist()):
+        per_ent.setdefault(s, {}).setdefault(p, 0)
+        per_ent[s][p] += 1
+    groups: dict[frozenset, dict] = {}
+    for e, pc in per_ent.items():
+        key = frozenset(pc)
+        g = groups.setdefault(key, {"count": 0, "occ": {}})
+        g["count"] += 1
+        for p, c in pc.items():
+            g["occ"][p] = g["occ"].get(p, 0) + c
+    return groups
+
+
+def random_table(rng, n=500, n_subj=60, n_pred=12):
+    s = rng.integers(0, n_subj, n).astype(np.int32)
+    p = rng.integers(0, n_pred, n).astype(np.int32)
+    o = rng.integers(1000, 1100, n).astype(np.int32)
+    return TripleTable.from_triples(s, p, o)
+
+
+def test_cs_matches_brute_force(rng):
+    for seed in range(5):
+        table = random_table(np.random.default_rng(seed))
+        cs = compute_characteristic_sets(table)
+        want = brute_force_cs(table)
+        assert cs.n_cs == len(want)
+        got = {}
+        for c in range(cs.n_cs):
+            key = frozenset(cs.preds_of(c).tolist())
+            got[key] = {
+                "count": int(cs.cs_count[c]),
+                "occ": dict(zip(cs.preds_of(c).tolist(), cs.occ_of(c).tolist())),
+            }
+        for key, g in want.items():
+            assert key in got
+            assert got[key]["count"] == g["count"]
+            assert got[key]["occ"] == g["occ"]
+
+
+def test_cs_totals(small_fed):
+    fed, _ = small_fed
+    for src in fed.sources:
+        cs = compute_characteristic_sets(src.table)
+        assert int(cs.cs_count.sum()) == len(src.table.subjects())
+        assert int(cs.pred_occ.sum()) == src.table.n_triples
+        # every entity maps to a CS that contains exactly its predicates
+        ent = int(src.table.s[0])
+        c = cs.cs_of_entity(ent)
+        ent_preds = set(src.table.p[src.table.scan(ent, None, None)].tolist())
+        assert set(cs.preds_of(c).tolist()) == ent_preds
+
+
+def test_relevant_cs_superset_semantics(rng):
+    table = random_table(rng, n=800, n_subj=100, n_pred=10)
+    cs = compute_characteristic_sets(table)
+    preds = [3, 7]
+    rel = cs.relevant_cs(preds)
+    for c in range(cs.n_cs):
+        has = set(preds) <= set(cs.preds_of(c).tolist())
+        assert (c in rel) == has
+
+
+def test_reduce_cs_conservative(rng):
+    table = random_table(np.random.default_rng(42), n=2000, n_subj=300, n_pred=14)
+    cs = compute_characteristic_sets(table)
+    if cs.n_cs < 8:
+        pytest.skip("not enough CSs")
+    red = reduce_cs(cs, max_cs=max(4, cs.n_cs // 3))
+    assert red.n_cs <= cs.n_cs
+    assert int(red.cs_count.sum()) == int(cs.cs_count.sum())
+    assert int(red.pred_occ.sum()) == int(cs.pred_occ.sum())
+    # no-false-negative: any pred set relevant before stays relevant after
+    for c in range(cs.n_cs):
+        preds = cs.preds_of(c).tolist()
+        assert len(red.relevant_cs(preds)) > 0, "reduction lost a relevant CS"

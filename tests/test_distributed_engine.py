@@ -1,0 +1,22 @@
+"""Distributed shard_map engine == exact local engine, via subprocess so the
+fake-device XLA flag never contaminates this process (DESIGN.md dry-run rule).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("mesh", [(2, 2), (4, 2)])
+def test_distributed_matches_local(mesh):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dist_selftest", str(mesh[0]), str(mesh[1])],
+        capture_output=True, text=True, timeout=900, env=env, cwd=REPO,
+    )
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr[-2000:]}"
+    assert "queries OK" in out.stdout

@@ -1,0 +1,22 @@
+"""Environment contract: tests and benches must see exactly ONE device —
+the 512-fake-device flag belongs to the dry-run alone (its module sets
+XLA_FLAGS before any jax import; see repro/launch/dryrun.py)."""
+import os
+
+import jax
+
+
+def test_tests_see_one_device():
+    assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", "")
+    assert jax.device_count() == 1
+
+
+def test_dryrun_sets_flag_first():
+    """The dry-run module's first statements must pin the device count."""
+    import inspect
+
+    import repro.launch.dryrun as dr
+
+    src = inspect.getsource(dr).splitlines()
+    head = "\n".join(src[:3])
+    assert "xla_force_host_platform_device_count=512" in head

@@ -1,0 +1,58 @@
+"""Pallas flash-attention kernel vs naive softmax oracle (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+
+
+def _naive(q, k, v, causal, window):
+    S = q.shape[1]
+    s = jnp.einsum("bqd,bkd->bqk", q, k)
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    mask = jnp.zeros((S, S))
+    if causal:
+        mask = jnp.where(j > i, -1e30, mask)
+    if window:
+        mask = mask + jnp.where(i - j >= window, -1e30, 0.0)
+    return jax.nn.softmax(s + mask, -1) @ v
+
+
+def test_flash_gqa_wrapper_matches_model_attention():
+    from repro.kernels import ops
+    from repro.models.layers import NEG_INF, gqa_output, gqa_scores
+
+    rng = np.random.default_rng(1)
+    B, S, H, KV, hd = 2, 256, 4, 2, 128
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    out = ops.flash_attention_gqa(q, k, v)
+    s = gqa_scores(q, k)
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    w = jax.nn.softmax(s + jnp.where(j > i, NEG_INF, 0.0), -1)
+    want = gqa_output(w, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("S,hd,bq,bk", [(256, 128, 128, 128), (512, 128, 128, 256),
+                                        (256, 256, 128, 128)])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 128), (False, 0)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(S, hd, bq, bk, causal, window, dtype):
+    rng = np.random.default_rng(S + hd + int(causal))
+    BH = 2
+    q = jnp.asarray(rng.normal(size=(BH, S, hd)), dtype) * hd ** -0.5
+    k = jnp.asarray(rng.normal(size=(BH, S, hd)), dtype)
+    v = jnp.asarray(rng.normal(size=(BH, S, hd)), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=bq, block_k=bk)
+    want = _naive(q.astype(jnp.float32), k.astype(jnp.float32),
+                  v.astype(jnp.float32), causal, window)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(want),
+                               rtol=tol, atol=tol)

@@ -1,0 +1,131 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.join_count import join_count
+from repro.kernels.seg_bitmap import NBUCKETS, seg_bitmap
+from repro.kernels.sorted_intersect import sorted_intersect_weighted
+from repro.kernels.summary_probe import summary_probe
+
+
+@pytest.mark.parametrize("na,nb", [(256, 256), (512, 256), (256, 768), (1024, 1024)])
+@pytest.mark.parametrize("overlap", [0.0, 0.3, 1.0])
+def test_sorted_intersect_sweep(na, nb, overlap):
+    rng = np.random.default_rng(na + nb + int(overlap * 10))
+    pool = rng.choice(50_000, size=na + nb, replace=False)
+    a = np.sort(pool[:na]).astype(np.int32)
+    b = np.sort(rng.permutation(np.concatenate([
+        rng.choice(a, size=int(overlap * min(na, nb)), replace=False) if overlap else np.empty(0, np.int32),
+        pool[na: na + nb - int(overlap * min(na, nb))],
+    ]))[:nb]).astype(np.int32)
+    b = np.sort(np.unique(b))[:nb]
+    b = np.pad(b, (0, nb - len(b)), constant_values=-2).astype(np.int32)
+    aw = rng.integers(1, 5, na).astype(np.int32)
+    bw = rng.integers(1, 5, nb).astype(np.int32)
+    bw[b == -2] = 0
+    got = sorted_intersect_weighted(jnp.asarray(a), jnp.asarray(aw), jnp.asarray(b), jnp.asarray(bw))
+    want = ref.sorted_intersect_weighted_ref(jnp.asarray(a), jnp.asarray(aw), jnp.asarray(b), jnp.asarray(bw))
+    assert int(got) == int(want)
+
+
+def test_intersect_count_wrapper_vs_numpy():
+    rng = np.random.default_rng(0)
+    for trial in range(10):
+        na, nb = rng.integers(1, 700, 2)
+        a = np.unique(rng.choice(10_000, size=na)).astype(np.int32)
+        b = np.unique(rng.choice(10_000, size=nb)).astype(np.int32)
+        aw = rng.integers(1, 6, len(a)).astype(np.int32)
+        bw = rng.integers(1, 6, len(b)).astype(np.int32)
+        got = ops.intersect_count(a, aw, b, bw)
+        common, ia, ib = np.intersect1d(a, b, assume_unique=True, return_indices=True)
+        want = int((aw[ia] * bw[ib]).sum())
+        assert got == want
+
+
+@pytest.mark.parametrize("n,n_seg", [(256, 128), (512, 256), (1024, 128)])
+def test_seg_bitmap_sweep(n, n_seg):
+    rng = np.random.default_rng(n + n_seg)
+    seg = np.sort(rng.integers(0, n_seg, n)).astype(np.int32)
+    bucket = rng.integers(0, NBUCKETS, n).astype(np.int32)
+    # pad rows with -1 segments
+    pad = (-n) % 256
+    seg_p = np.concatenate([seg, np.full(pad, -1, np.int32)])
+    bkt_p = np.concatenate([bucket, np.zeros(pad, np.int32)])
+    got = seg_bitmap(jnp.asarray(seg_p), jnp.asarray(bkt_p), n_seg)
+    want = ref.seg_bitmap_ref(jnp.asarray(seg_p), jnp.asarray(bkt_p), n_seg, NBUCKETS)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=0)
+
+
+def test_predicate_bitmaps_wrapper():
+    rng = np.random.default_rng(7)
+    n, n_seg = 700, 37
+    seg = np.sort(rng.integers(0, n_seg, n)).astype(np.int32)
+    bucket = rng.integers(0, NBUCKETS, n).astype(np.int32)
+    got = ops.predicate_bitmaps(seg, bucket, n_seg)
+    want = np.zeros((n_seg, NBUCKETS), bool)
+    for s, b in zip(seg, bucket):
+        want[s, b] = True
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("np_,nb", [(256, 256), (512, 512), (768, 256)])
+def test_join_count_sweep(np_, nb):
+    rng = np.random.default_rng(np_ + nb)
+    build = np.sort(rng.choice(5000, size=nb, replace=False)).astype(np.int32)
+    bw = rng.integers(0, 4, nb).astype(np.int32)
+    probe = rng.choice(6000, size=np_).astype(np.int32)
+    got = join_count(jnp.asarray(probe), jnp.asarray(build), jnp.asarray(bw))
+    want = ref.join_count_ref(jnp.asarray(probe), jnp.asarray(build), jnp.asarray(bw))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_match_counts_wrapper():
+    rng = np.random.default_rng(3)
+    build = np.unique(rng.choice(1000, 300)).astype(np.int32)
+    bw = rng.integers(1, 5, len(build)).astype(np.int32)
+    probe = rng.choice(1200, 450).astype(np.int32)
+    got = ops.match_counts(probe, build, bw)
+    lut = dict(zip(build.tolist(), bw.tolist()))
+    want = np.array([lut.get(int(p), 0) for p in probe], np.int32)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("na,nb,w", [(128, 128, 8), (256, 128, 16), (128, 256, 8)])
+def test_summary_probe_sweep(na, nb, w):
+    rng = np.random.default_rng(na + nb + w)
+    a = rng.integers(-(2**31), 2**31 - 1, (na, w), dtype=np.int64).astype(np.int32)
+    b = rng.integers(-(2**31), 2**31 - 1, (nb, w), dtype=np.int64).astype(np.int32)
+    got = summary_probe(jnp.asarray(a), jnp.asarray(b))
+    want = ref.summary_probe_ref(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_signature_overlap_matches_summaries(small_fed):
+    """Kernel path must agree with the numpy candidate generation on real
+    summary signatures (uint64 host layout)."""
+    fed, _ = small_fed
+    from repro.core.characteristic_sets import compute_characteristic_sets
+    from repro.core.summaries import build_summary
+
+    kinds = np.asarray(fed.dictionary.kinds, np.int8)
+    auth = fed.dictionary.authority_array()
+    cs_a = compute_characteristic_sets(fed.sources[7].table)
+    cs_b = compute_characteristic_sets(fed.sources[3].table)
+    sa = build_summary(fed.sources[7].table, cs_a, auth, src=7, entity_mask=kinds == 0)
+    sb = build_summary(fed.sources[3].table, cs_b, auth, src=3, entity_mask=kinds == 0)
+    if len(sa.obj_sig) == 0 or len(sb.subj_sig) == 0:
+        pytest.skip("no signatures")
+    pop = ops.signature_overlap(sa.obj_sig, sb.subj_sig)
+    want = (sa.obj_sig[:, None, :] & sb.subj_sig[None, :, :]).any(-1)
+    np.testing.assert_array_equal(pop > 0, want)
+
+
+def test_popcount_identity():
+    rng = np.random.default_rng(11)
+    v = jnp.asarray(rng.integers(-(2**31), 2**31 - 1, 4096, dtype=np.int64).astype(np.int32))
+    got = np.asarray(ref.popcount32_ref(v))
+    want = np.array([bin(int(np.uint32(x))).count("1") for x in np.asarray(v)])
+    np.testing.assert_array_equal(got, want)

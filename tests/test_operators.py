@@ -1,0 +1,80 @@
+"""Bounded-buffer jnp operators vs numpy semantics."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.engine import operators as ops
+
+
+def test_scan_pattern_wildcards():
+    rng = np.random.default_rng(0)
+    table = rng.integers(0, 20, (64, 3)).astype(np.int32)
+    trow = np.ones(64, bool)
+    trow[50:] = False
+    for pattern in ([5, -1, -1], [-1, 3, -1], [-1, 3, 7], [2, 1, -1]):
+        data, valid, ovf = ops.scan_pattern(jnp.asarray(table), jnp.asarray(trow),
+                                            jnp.asarray(pattern, jnp.int32), 32, (0, 2))
+        s, p, o = pattern
+        m = trow.copy()
+        if s >= 0:
+            m &= table[:, 0] == s
+        if p >= 0:
+            m &= table[:, 1] == p
+        if o >= 0:
+            m &= table[:, 2] == o
+        want = table[m][:, [0, 2]]
+        got = np.asarray(data)[np.asarray(valid)]
+        assert not bool(ovf)
+        np.testing.assert_array_equal(np.sort(got, axis=0), np.sort(want[:32], axis=0))
+
+
+def test_scan_pattern_overflow_flag():
+    table = np.zeros((64, 3), np.int32)
+    trow = np.ones(64, bool)
+    _, valid, ovf = ops.scan_pattern(jnp.asarray(table), jnp.asarray(trow),
+                                     jnp.asarray([-1, -1, -1], jnp.int32), 16, (0, 1))
+    assert bool(ovf) and int(np.asarray(valid).sum()) == 16
+
+
+@pytest.mark.parametrize("cap", [64, 256])
+def test_merge_join_matches_numpy(cap):
+    rng = np.random.default_rng(cap)
+    L, R = 48, 56
+    left = rng.integers(0, 12, (64, 2)).astype(np.int32)
+    right = rng.integers(0, 12, (64, 2)).astype(np.int32)
+    lvalid = np.arange(64) < L
+    rvalid = np.arange(64) < R
+    data, valid, ovf = ops.merge_join(jnp.asarray(left), jnp.asarray(lvalid), 0,
+                                      jnp.asarray(right), jnp.asarray(rvalid), 1, cap)
+    got = {tuple(r) for r in np.asarray(data)[np.asarray(valid)].tolist()}
+    want = set()
+    for i in range(L):
+        for j in range(R):
+            if left[i, 0] == right[j, 1]:
+                want.add(tuple(left[i].tolist() + right[j].tolist()))
+    if not bool(ovf):
+        assert got == want
+    else:
+        assert got <= want
+
+
+def test_distinct():
+    rng = np.random.default_rng(5)
+    rel = rng.integers(0, 4, (32, 2)).astype(np.int32)
+    valid = np.arange(32) < 30
+    data, v, ovf = ops.distinct(jnp.asarray(rel), jnp.asarray(valid), 32)
+    got = [tuple(r) for r in np.asarray(data)[np.asarray(v)].tolist()]
+    want = {tuple(r) for r in rel[:30].tolist()}
+    assert len(got) == len(set(got)) == len(want)
+    assert set(got) == want
+
+
+def test_semi_bind():
+    rel = np.array([[1, 10], [2, 20], [3, 30], [4, 40]], np.int32)
+    valid = np.array([True, True, True, False])
+    keys = np.array([2, 4, 9], np.int32)
+    kvalid = np.array([True, True, False])
+    data, v, ovf = ops.semi_bind(jnp.asarray(rel), jnp.asarray(valid),
+                                 jnp.asarray(keys), jnp.asarray(kvalid), 0, 4)
+    got = np.asarray(data)[np.asarray(v)]
+    np.testing.assert_array_equal(got, [[2, 20]])

@@ -1,0 +1,122 @@
+"""Optimized paths (EXPERIMENTS.md §Perf) must match the baseline math:
+chunked attention == naive softmax; chunked loss == full-logit loss;
+chunked mamba scan == full associative scan; absorbed MLA decode == naive."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config.base import PerfFlags, reduced_config
+from repro.configs import get_arch
+from repro.models import model as MDL
+from repro.models.attention_chunked import chunked_gqa_attention
+from repro.train.train_step import loss_fn
+
+
+def _with_flags(cfg, **kw):
+    return dataclasses.replace(cfg, perf=PerfFlags(**kw))
+
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 8), (False, 0)])
+@pytest.mark.parametrize("S,H,KV", [(64, 4, 2), (128, 4, 4), (64, 8, 1)])
+def test_chunked_attention_matches_naive(causal, window, S, H, KV):
+    rng = np.random.default_rng(S + H + KV)
+    B, hd = 2, 16
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    out = chunked_gqa_attention(q, k, v, causal=causal, window=window,
+                                q_chunk=32, k_chunk=16)
+    # naive reference
+    from repro.models.layers import NEG_INF, gqa_output, gqa_scores
+    scores = gqa_scores(q, k)
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    mask = jnp.zeros((S, S))
+    if causal:
+        mask = jnp.where(j > i, NEG_INF, mask)
+    if window:
+        mask = jnp.where(i - j >= window, NEG_INF, mask)
+    w = jax.nn.softmax(scores + mask, axis=-1)
+    want = gqa_output(w, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_chunked_attention_in_model():
+    cfg = reduced_config(get_arch("gemma3-12b"))
+    cfg_opt = _with_flags(cfg, chunked_attention=True, attn_chunk=8)
+    params = MDL.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 32)), jnp.int32)}
+    base, _ = MDL.forward(cfg, params, batch)
+    opt, _ = MDL.forward(cfg_opt, params, batch)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(opt), rtol=1e-4, atol=1e-4)
+
+
+def test_chunked_loss_matches_full():
+    cfg = reduced_config(get_arch("qwen2-0.5b"))
+    cfg_opt = _with_flags(cfg, chunked_loss=True, loss_chunk=8)
+    params = MDL.init_params(cfg, jax.random.PRNGKey(1), jnp.float32)
+    rng = np.random.default_rng(1)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 32)), jnp.int32),
+             "labels": jnp.asarray(rng.integers(0, cfg.vocab, (2, 32)), jnp.int32)}
+    l0, (nll0, _) = loss_fn(cfg, params, batch)
+    l1, (nll1, _) = loss_fn(cfg_opt, params, batch)
+    np.testing.assert_allclose(float(nll0), float(nll1), rtol=1e-5)
+    # gradients must match too
+    g0 = jax.grad(lambda p: loss_fn(cfg, p, batch)[0])(params)
+    g1 = jax.grad(lambda p: loss_fn(cfg_opt, p, batch)[0])(params)
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-5)
+
+
+def test_chunked_mamba_matches_full():
+    cfg = reduced_config(get_arch("falcon-mamba-7b"))
+    cfg_opt = _with_flags(cfg, mamba_chunk=8)
+    params = MDL.init_params(cfg, jax.random.PRNGKey(2), jnp.float32)
+    rng = np.random.default_rng(2)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 32)), jnp.int32)}
+    base, _ = MDL.forward(cfg, params, batch)
+    opt, _ = MDL.forward(cfg_opt, params, batch)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(opt), rtol=2e-4, atol=2e-4)
+
+
+def test_kv_quant_int8_decode_close_to_fp():
+    """int8 KV cache: bounded quantization error on decode logits."""
+    cfg = reduced_config(get_arch("gemma3-12b"))
+    cfg_q = _with_flags(cfg, kv_quant_int8=True)
+    params = MDL.init_params(cfg, jax.random.PRNGKey(5), jnp.float32)
+    B, T = 2, 12
+    rng = np.random.default_rng(5)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (B, T)), jnp.int32)
+    c0 = MDL.init_decode_caches(cfg, B, T, jnp.float32)
+    c1 = MDL.init_decode_caches(cfg_q, B, T, jnp.float32)
+    assert c1["groups"]["slot_0"]["k"].dtype == jnp.int8
+    errs = []
+    for t in range(T):
+        l0, c0 = MDL.decode_step(cfg, params, c0, tokens[:, t: t + 1], jnp.int32(t))
+        l1, c1 = MDL.decode_step(cfg_q, params, c1, tokens[:, t: t + 1], jnp.int32(t))
+        denom = float(jnp.abs(l0).max())
+        errs.append(float(jnp.abs(l0 - l1).max()) / max(denom, 1e-6))
+    assert max(errs) < 0.05, f"int8 KV error too large: {max(errs):.3f}"
+    # greedy tokens unchanged
+    np.testing.assert_array_equal(np.asarray(jnp.argmax(l0[:, -1], -1)),
+                                  np.asarray(jnp.argmax(l1[:, -1], -1)))
+
+
+def test_mla_absorbed_decode_matches_naive():
+    cfg = reduced_config(get_arch("deepseek-v2-236b"))
+    cfg_opt = _with_flags(cfg, mla_absorb=True)
+    params = MDL.init_params(cfg, jax.random.PRNGKey(3), jnp.float32)
+    B, T = 2, 8
+    rng = np.random.default_rng(3)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (B, T)), jnp.int32)
+    c0 = MDL.init_decode_caches(cfg, B, T, jnp.float32)
+    c1 = MDL.init_decode_caches(cfg_opt, B, T, jnp.float32)
+    for t in range(T):
+        l0, c0 = MDL.decode_step(cfg, params, c0, tokens[:, t: t + 1], jnp.int32(t))
+        l1, c1 = MDL.decode_step(cfg_opt, params, c1, tokens[:, t: t + 1], jnp.int32(t))
+        np.testing.assert_allclose(np.asarray(l0), np.asarray(l1),
+                                   rtol=2e-4, atol=2e-4)

@@ -1,0 +1,93 @@
+"""End-to-end: every optimizer's plan over the full workload returns the
+complete result set (the paper's non-negotiable guarantee), and Odyssey's
+plan metrics beat the heuristic baselines in aggregate."""
+import numpy as np
+import pytest
+
+from repro.baselines import FedXOptimizer, HibiscusOptimizer, VoidDPOptimizer
+from repro.core.planner import OdysseyOptimizer
+from repro.engine.local import LocalEngine, naive_evaluate
+
+
+def _result_set(rel, proj):
+    n = len(next(iter(rel.values()))) if rel else 0
+    return set(zip(*[rel[v].tolist() for v in proj])) if n else set()
+
+
+@pytest.fixture(scope="module")
+def engines(small_fed, small_stats):
+    from repro.baselines.hybrids import FedXOdyssey, OdysseyFedX
+
+    fed, _ = small_fed
+    return {
+        "odyssey": OdysseyOptimizer(small_stats),
+        "fedx": FedXOptimizer(fed),
+        "fedx_warm": FedXOptimizer(fed, warm=True),
+        "void_dp": VoidDPOptimizer(fed),
+        "splendid": VoidDPOptimizer(fed, use_ask=True),
+        "hibiscus": HibiscusOptimizer(fed),
+        "odyssey_fedx": OdysseyFedX(small_stats),
+        "fedx_odyssey": FedXOdyssey(small_stats, fed),
+    }
+
+
+def test_all_optimizers_complete_results(small_fed, workload, engines):
+    fed, _ = small_fed
+    eng = LocalEngine(fed)
+    for q in workload:
+        want = naive_evaluate(fed, q)
+        for name, opt in engines.items():
+            plan = opt.optimize(q)
+            rel, m = eng.execute(plan)
+            got = _result_set(rel, q.effective_projection())
+            assert got == want, f"{name} incomplete/incorrect on {q.name}"
+
+
+def test_odyssey_plan_quality(small_fed, workload, engines):
+    """Aggregate NSS / NSQ / NTT: Odyssey <= FedX and <= VOID-DP (paper
+    Figs. 5, 6, 8 directionally)."""
+    fed, _ = small_fed
+    eng = LocalEngine(fed)
+    agg = {k: dict(ntt=0, nsq=0, nss=0) for k in engines}
+    for q in workload:
+        for name, opt in engines.items():
+            plan = opt.optimize(q)
+            rel, m = eng.execute(plan)
+            agg[name]["ntt"] += m.transferred_tuples
+            agg[name]["nsq"] += plan.n_subqueries
+            agg[name]["nss"] += plan.n_selected_sources
+    assert agg["odyssey"]["nss"] <= agg["fedx"]["nss"]
+    assert agg["odyssey"]["nss"] <= agg["void_dp"]["nss"]
+    assert agg["odyssey"]["nsq"] <= agg["fedx"]["nsq"]
+    assert agg["odyssey"]["nsq"] <= agg["void_dp"]["nsq"]
+    assert agg["odyssey"]["ntt"] <= agg["fedx"]["ntt"]
+    assert agg["odyssey"]["ntt"] <= agg["void_dp"]["ntt"]
+
+
+def test_source_selection_no_false_negatives(small_fed, small_stats, workload):
+    """Executing ONLY on Odyssey-selected sources must still give the
+    complete answer (paper: "it will not miss any relevant sources")."""
+    fed, _ = small_fed
+    opt = OdysseyOptimizer(small_stats)
+    eng = LocalEngine(fed)
+    for q in workload:
+        plan = opt.optimize(q)
+        rel, _ = eng.execute(plan)
+        got = _result_set(rel, q.effective_projection())
+        want = naive_evaluate(fed, q)
+        assert want <= got and got == want
+
+
+def test_distinct_and_projection(small_fed, small_stats, workload):
+    fed, _ = small_fed
+    opt = OdysseyOptimizer(small_stats)
+    eng = LocalEngine(fed)
+    for q in workload:
+        if not q.distinct:
+            continue
+        plan = opt.optimize(q)
+        rel, _ = eng.execute(plan)
+        proj = q.effective_projection()
+        assert set(rel.keys()) == set(proj)
+        rows = list(zip(*[rel[v].tolist() for v in proj])) if rel and len(rel[proj[0]]) else []
+        assert len(rows) == len(set(rows)), "DISTINCT produced duplicates"

@@ -1,0 +1,141 @@
+"""Hypothesis property tests on the system's core invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.characteristic_sets import compute_characteristic_sets
+from repro.core.cardinality import star_cardinality_distinct, star_cardinality_estimate
+from repro.core.summaries import _signature
+from repro.rdf.dataset import TripleTable
+from repro.stats.reduce import reduce_cs
+
+
+@st.composite
+def triple_tables(draw, max_subj=40, max_pred=10, max_rows=300):
+    n = draw(st.integers(1, max_rows))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    s = rng.integers(0, max_subj, n).astype(np.int32)
+    p = rng.integers(0, max_pred, n).astype(np.int32)
+    o = rng.integers(100, 160, n).astype(np.int32)
+    return TripleTable.from_triples(s, p, o)
+
+
+@given(triple_tables())
+@settings(max_examples=40, deadline=None)
+def test_cs_partition_invariants(table):
+    """CSs partition the subjects; occurrences sum to the triple count."""
+    cs = compute_characteristic_sets(table)
+    assert int(cs.cs_count.sum()) == len(table.subjects())
+    assert int(cs.pred_occ.sum()) == table.n_triples
+    # every CS's predicate list is sorted & unique
+    for c in range(cs.n_cs):
+        preds = cs.preds_of(c)
+        assert np.all(np.diff(preds) > 0)
+        # occurrences >= count (every entity has >= 1 triple per predicate)
+        assert np.all(cs.occ_of(c) >= cs.cs_count[c])
+
+
+@given(triple_tables(), st.integers(0, 9), st.integers(0, 9))
+@settings(max_examples=40, deadline=None)
+def test_formula1_exact_against_bruteforce(table, p1, p2):
+    """Formula (1) == brute-force count of subjects having all predicates."""
+    cs = compute_characteristic_sets(table)
+    preds = sorted({p1, p2})
+    got = star_cardinality_distinct(cs, preds)
+    want = 0
+    for e in table.subjects():
+        have = set(table.p[table.scan(int(e), None, None)].tolist())
+        if set(preds) <= have:
+            want += 1
+    assert got == want
+
+
+@given(triple_tables(), st.integers(0, 9))
+@settings(max_examples=30, deadline=None)
+def test_formula2_upper_bounds_formula1(table, p1):
+    cs = compute_characteristic_sets(table)
+    d = star_cardinality_distinct(cs, [p1])
+    e = star_cardinality_estimate(cs, [p1])
+    assert e >= d - 1e-6
+
+
+@given(triple_tables(), st.integers(2, 12))
+@settings(max_examples=25, deadline=None)
+def test_reduce_cs_never_loses_relevance(table, max_cs):
+    """The §3.3 reduction must keep every query answerable (no false
+    negatives): any predicate set relevant before stays relevant after."""
+    cs = compute_characteristic_sets(table)
+    red = reduce_cs(cs, max_cs)
+    assert int(red.cs_count.sum()) == int(cs.cs_count.sum())
+    for c in range(cs.n_cs):
+        preds = cs.preds_of(c).tolist()
+        assert len(red.relevant_cs(preds)) > 0
+        # formula-1 value may only grow (conservative merge)
+        assert (star_cardinality_distinct(red, preds)
+                >= star_cardinality_distinct(cs, preds))
+
+
+@given(st.lists(st.integers(0, 10_000), min_size=1, max_size=200, unique=True),
+       st.lists(st.integers(0, 10_000), min_size=1, max_size=200, unique=True),
+       st.sampled_from([256, 1024, 4096]))
+@settings(max_examples=60, deadline=None)
+def test_signature_no_false_negatives(a, b, n_bits):
+    """Bitset summaries may over-approximate but never miss an overlap."""
+    a = np.asarray(a, np.int64)
+    b = np.asarray(b, np.int64)
+    sig_a = _signature(a, n_bits)
+    sig_b = _signature(b, n_bits)
+    if len(np.intersect1d(a, b)):
+        assert bool((sig_a & sig_b).any())
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 64))
+@settings(max_examples=30, deadline=None)
+def test_loader_restart_equivalence(seed, step):
+    """Checkpoint/restart: batch_at(step) after 'restart' is identical."""
+    from repro.data.loader import TokenLoader
+
+    a = TokenLoader(vocab=97, batch=2, seq=16, seed=seed % 1000)
+    b = TokenLoader(vocab=97, batch=2, seq=16, seed=seed % 1000)
+    x = a.batch_at(step)
+    _ = b.batch_at(0)  # consumed some other batch first
+    y = b.batch_at(step)
+    np.testing.assert_array_equal(x["tokens"], y["tokens"])
+
+
+@given(triple_tables(max_subj=20, max_pred=6, max_rows=120))
+@settings(max_examples=20, deadline=None)
+def test_dp_plan_cost_not_worse_than_left_deep(table):
+    """The DP optimizer's plan cost is <= a naive left-deep ordering's cost
+    under the same cost model (optimality on its own model)."""
+    from repro.core.cost import CostModel
+    from repro.core.decomposition import decompose
+    from repro.core.federation import FederatedStats, export_link_stats
+    from repro.core.characteristic_pairs import compute_characteristic_pairs
+    from repro.core.join_order import (JoinTree, dp_join_order,
+                                       star_cardinality)
+    from repro.core.source_selection import select_sources
+    from repro.query.algebra import BGPQuery, Const, TriplePattern, Var
+
+    cs = compute_characteristic_sets(table)
+    cp = compute_characteristic_pairs(table, cs, 0)
+    stats = FederatedStats(cs=[cs], intra_cp=[cp])
+    preds = np.unique(table.p)
+    if len(preds) < 2:
+        return
+    q = BGPQuery([
+        TriplePattern(Var("x"), Const(int(preds[0])), Var("y")),
+        TriplePattern(Var("y"), Const(int(preds[1 % len(preds)])), Var("z")),
+    ], distinct=True)
+    graph = decompose(q)
+    sel = select_sources(graph, stats)
+    if any(len(s) == 0 for s in sel.star_sources):
+        return
+    cm = CostModel()
+    tree = dp_join_order(graph, stats, sel, cm, True)
+    # left-deep: leaves in star order, hash joins
+    cards = [star_cardinality(s, stats, sel, True) for s in graph.stars]
+    left_cost = sum(cm.leaf_cost(c, sel.star_sources[i])
+                    for i, c in enumerate(cards))
+    left_cost += cm.hash_join_cost(tree.cardinality)
+    assert tree.cost <= left_cost + 1e-6
