@@ -20,7 +20,7 @@ def main() -> None:
     scale = args.scale if args.scale is not None else (0.25 if args.quick else 1.0)
 
     from benchmarks import fedbench_figs as F
-    from benchmarks import kernel_bench, roofline_bench
+    from benchmarks import kernel_bench, planner_bench, roofline_bench
     from benchmarks.common import run_all
 
     csv_rows: list[tuple] = []
@@ -44,6 +44,7 @@ def main() -> None:
     add(F.fig7_execution_time(runs))
     add(F.fig8_transferred_tuples(runs))
     add(F.fig9_hybrids(runs))
+    add(planner_bench.run(scale))
     add(kernel_bench.run())
     add(roofline_bench.run())
 

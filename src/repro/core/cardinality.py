@@ -97,6 +97,77 @@ def linked_star_cardinality_estimate(
     return est
 
 
+# --------------------------------------------------------------------------
+# Memoized forms — the planner hot path re-evaluates the same (preds, CS
+# restriction) combinations across subsets, queries and batches; results are
+# cached on the statistics objects themselves (``CSStats._card_cache`` /
+# ``CPStats._card_cache``) so the cache lives exactly as long as the stats.
+# Long-lived serving processes see unbounded key diversity, so each cache is
+# wiped once it reaches ``CARD_CACHE_MAX`` entries (cheap: entries are pure
+# recomputation, and a wipe preserves the steady-state hit rate for
+# templated workloads).
+# --------------------------------------------------------------------------
+
+CARD_CACHE_MAX = 1 << 16
+
+
+def _rel_key(rel: np.ndarray | None) -> bytes | None:
+    return None if rel is None else np.ascontiguousarray(rel).tobytes()
+
+
+def _cache_put(cache: dict, key, value):
+    if len(cache) >= CARD_CACHE_MAX:
+        cache.clear()
+    cache[key] = value
+    return value
+
+
+def star_cardinality_distinct_cached(cs: CSStats, preds: list[int],
+                                     rel: np.ndarray | None = None) -> int:
+    key = ("sd", tuple(int(p) for p in preds), _rel_key(rel))
+    cache = cs._card_cache
+    v = cache.get(key)
+    if v is None:
+        v = _cache_put(cache, key, star_cardinality_distinct(cs, preds, rel))
+    return v
+
+
+def star_cardinality_estimate_cached(cs: CSStats, preds: list[int],
+                                     rel: np.ndarray | None = None) -> float:
+    key = ("se", tuple(int(p) for p in preds), _rel_key(rel))
+    cache = cs._card_cache
+    v = cache.get(key)
+    if v is None:
+        v = _cache_put(cache, key, star_cardinality_estimate(cs, preds, rel))
+    return v
+
+
+def linked_star_cardinality_distinct_cached(
+    cp: CPStats, cs1: CSStats, cs2: CSStats,
+    preds1: list[int], preds2: list[int], link_pred: int,
+) -> int:
+    key = ("ld", tuple(int(p) for p in preds1), tuple(int(p) for p in preds2),
+           int(link_pred))
+    cache = cp._card_cache
+    v = cache.get(key)
+    if v is None:
+        v = _cache_put(cache, key, linked_star_cardinality_distinct(cp, cs1, cs2, preds1, preds2, link_pred))
+    return v
+
+
+def linked_star_cardinality_estimate_cached(
+    cp: CPStats, cs1: CSStats, cs2: CSStats,
+    preds1: list[int], preds2: list[int], link_pred: int,
+) -> float:
+    key = ("le", tuple(int(p) for p in preds1), tuple(int(p) for p in preds2),
+           int(link_pred))
+    cache = cp._card_cache
+    v = cache.get(key)
+    if v is None:
+        v = _cache_put(cache, key, linked_star_cardinality_estimate(cp, cs1, cs2, preds1, preds2, link_pred))
+    return v
+
+
 def join_selectivity(
     cp: CPStats,
     cs1: CSStats,

@@ -11,7 +11,7 @@ identical for both.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import numpy as np
 
@@ -33,6 +33,7 @@ class CPStats:
     count: np.ndarray   # (n_cp,) int64 — #links (entity pairs / triples)
     src1: int = 0
     src2: int = 0
+    _card_cache: dict = field(default_factory=dict, repr=False)  # memoized formulas
 
     @property
     def n_cp(self) -> int:

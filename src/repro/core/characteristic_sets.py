@@ -34,6 +34,7 @@ class CSStats:
     ent_ids: np.ndarray                  # sorted subject ids (int32)
     ent_cs: np.ndarray                   # (n_ent,) int32: CS index per subject
     _pred_index: dict[int, np.ndarray] = field(default_factory=dict, repr=False)
+    _card_cache: dict = field(default_factory=dict, repr=False)  # memoized formulas
 
     @property
     def n_cs(self) -> int:

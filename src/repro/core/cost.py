@@ -5,10 +5,18 @@ cardinalities of intermediate results and how many results need to be
 transferred between endpoints during execution." — we implement exactly that,
 with the endpoint-characteristics extension point the paper mentions
 (per-source weight multipliers).
+
+Each formula exists in two forms: the scalar form used when costing a single
+plan node, and a vectorized form (``*_v``) over numpy arrays used by the
+bitmask DP to cost every candidate partition of a subset at once.  The
+vectorized forms keep the exact operation order of the scalar ones so both
+paths produce bit-identical costs for the same inputs.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+
+import numpy as np
 
 
 @dataclass
@@ -42,4 +50,24 @@ class CostModel:
         n_req = max(1.0, card_left / self.bind_batch) * max(1, len(right_sources))
         return (self.request_cost * n_req
                 + self.transfer_weight * card_out * self.src_w(right_sources)
+                + self.intermediate_weight * card_out)
+
+    # -- vectorized forms (arrays of candidates at once) ---------------------
+
+    def leaf_cost_v(self, card: np.ndarray, n_src: np.ndarray,
+                    src_w: np.ndarray | float) -> np.ndarray:
+        """``leaf_cost`` over arrays: ``card``/``n_src``/``src_w`` aligned."""
+        return (self.transfer_weight * card * src_w
+                + self.request_cost * np.maximum(1, n_src))
+
+    def hash_join_cost_v(self, card_out: np.ndarray) -> np.ndarray:
+        return self.intermediate_weight * card_out
+
+    def bind_join_cost_v(self, card_left: np.ndarray, card_out: np.ndarray,
+                         n_src: np.ndarray, src_w: np.ndarray | float) -> np.ndarray:
+        """``bind_join_cost`` over candidate arrays; ``n_src`` must already be
+        >= 1 (callers mask out source-less right sides)."""
+        n_req = np.maximum(1.0, card_left / self.bind_batch) * n_src
+        return (self.request_cost * n_req
+                + self.transfer_weight * card_out * src_w
                 + self.intermediate_weight * card_out)

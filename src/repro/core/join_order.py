@@ -6,6 +6,28 @@
 * Across stars: stars collapse into meta-nodes; exact dynamic programming over
   connected subsets, with cardinalities from CS/CP statistics and the §3.4
   cost function (intermediate results + transfers).
+
+Two DP implementations share the same plan space and cost model:
+
+``dp_join_order``      vectorized bitmask DP — subsets are integer bitmasks,
+                       per-subset cardinalities / connectivity / exclusive
+                       groups are precomputed numpy arrays, and each popcount
+                       layer costs every (subset, partition) candidate with
+                       one set of array ops.  Star cardinalities and edge
+                       selectivities are memoized per query (and the
+                       underlying CS/CP formulas on the statistics objects,
+                       see ``repro.core.cardinality``), so batches of related
+                       queries amortize the statistics work.  This is the
+                       optimizer hot path.
+``dp_join_order_ref``  the original frozenset/`itertools.combinations`
+                       formulation with unmemoized statistics, kept as the
+                       reference oracle — tests assert the bitmask DP returns
+                       plans with identical cost and leaf order.
+
+Both enumerate candidates in the same order (exclusive-group leaf, then for
+each proper submask in (popcount asc, combination-lex) order: hash join, then
+bind join) and break cost ties by first occurrence, so they pick the same
+plan even when several plans share the optimal cost.
 """
 from __future__ import annotations
 
@@ -16,9 +38,13 @@ import numpy as np
 
 from repro.core.cardinality import (
     linked_star_cardinality_distinct,
+    linked_star_cardinality_distinct_cached,
     linked_star_cardinality_estimate,
+    linked_star_cardinality_estimate_cached,
     star_cardinality_distinct,
+    star_cardinality_distinct_cached,
     star_cardinality_estimate,
+    star_cardinality_estimate_cached,
 )
 from repro.core.cost import CostModel
 from repro.core.decomposition import Edge, Star, StarGraph
@@ -27,6 +53,11 @@ from repro.core.source_selection import SourceSelection
 from repro.query.algebra import Const, TriplePattern, Var
 
 GENERIC_EDGE_SELECTIVITY = 1e-3  # fallback for non object->subject joins
+
+# Above this star count the bitmask DP's per-layer candidate matrices stop
+# fitting comfortably in memory; fall back to the reference DP (queries this
+# large are far past what either implementation handles interactively).
+MAX_BITMASK_STARS = 14
 
 
 def _bound_object_factor(star: Star, preds: list[int], stats: FederatedStats,
@@ -49,9 +80,20 @@ def _bound_object_factor(star: Star, preds: list[int], stats: FederatedStats,
 
 
 def star_cardinality(star: Star, stats: FederatedStats, sel: SourceSelection,
-                     distinct: bool, preds: list[int] | None = None) -> float:
+                     distinct: bool, preds: list[int] | None = None,
+                     use_cache: bool = True) -> float:
     """Cardinality of one star over its selected sources (formulas 1/2,
-    summed over sources — each entity lives in one source, footnote 4)."""
+    summed over sources — each entity lives in one source, footnote 4).
+
+    Memoized on the (per-query) source selection keyed by (star, preds,
+    distinct); ``use_cache=False`` recomputes from scratch (the reference
+    path used by ``dp_join_order_ref``)."""
+    if use_cache:
+        key = ("sc", star.idx, None if preds is None else tuple(preds), distinct)
+        memo = sel._memo
+        v = memo.get(key)
+        if v is not None:
+            return v
     if preds is None:
         preds = star.bound_preds()
     srcs = sel.star_sources[star.idx]
@@ -64,12 +106,17 @@ def star_cardinality(star: Star, stats: FederatedStats, sel: SourceSelection,
         else:
             rel = np.intersect1d(rel, cs.relevant_cs(preds), assume_unique=False)
         if distinct:
-            total += star_cardinality_distinct(cs, preds, rel)
+            total += (star_cardinality_distinct_cached(cs, preds, rel) if use_cache
+                      else star_cardinality_distinct(cs, preds, rel))
         else:
-            total += star_cardinality_estimate(cs, preds, rel)
+            total += (star_cardinality_estimate_cached(cs, preds, rel) if use_cache
+                      else star_cardinality_estimate(cs, preds, rel))
     if isinstance(star.subject, Const):
-        return min(total, 1.0) if distinct else total / max(1.0, total)
-    total *= _bound_object_factor(star, preds, stats, srcs)
+        total = min(total, 1.0) if distinct else total / max(1.0, total)
+    else:
+        total *= _bound_object_factor(star, preds, stats, srcs)
+    if use_cache:
+        memo[key] = total
     return total
 
 
@@ -104,11 +151,18 @@ def order_star_patterns(star: Star, stats: FederatedStats, sel: SourceSelection,
 
 
 def edge_selectivity(edge: Edge, graph: StarGraph, stats: FederatedStats,
-                     sel: SourceSelection, distinct: bool) -> float:
+                     sel: SourceSelection, distinct: bool,
+                     use_cache: bool = True) -> float:
     """Join selectivity of a star-link from CP statistics, aggregated over the
-    viable source pairs of the edge."""
+    viable source pairs of the edge.  Memoized like ``star_cardinality``."""
     if edge.generic or edge.pred is None:
         return GENERIC_EDGE_SELECTIVITY
+    if use_cache:
+        key = ("es", edge.src, edge.dst, edge.pred, distinct)
+        memo = sel._memo
+        v = memo.get(key)
+        if v is not None:
+            return v
     s1 = graph.stars[edge.src]
     s2 = graph.stars[edge.dst]
     p1 = s1.bound_preds()
@@ -120,12 +174,21 @@ def edge_selectivity(edge: Edge, graph: StarGraph, stats: FederatedStats,
             if cp is None:
                 continue
             if distinct:
-                links += linked_star_cardinality_distinct(cp, stats.cs[a], stats.cs[b], p1, p2, edge.pred)
+                links += (linked_star_cardinality_distinct_cached(
+                    cp, stats.cs[a], stats.cs[b], p1, p2, edge.pred) if use_cache
+                    else linked_star_cardinality_distinct(
+                        cp, stats.cs[a], stats.cs[b], p1, p2, edge.pred))
             else:
-                links += linked_star_cardinality_estimate(cp, stats.cs[a], stats.cs[b], p1, p2, edge.pred)
-    c1 = max(1.0, star_cardinality(s1, stats, sel, True))
-    c2 = max(1.0, star_cardinality(s2, stats, sel, True))
-    return min(1.0, links / (c1 * c2))
+                links += (linked_star_cardinality_estimate_cached(
+                    cp, stats.cs[a], stats.cs[b], p1, p2, edge.pred) if use_cache
+                    else linked_star_cardinality_estimate(
+                        cp, stats.cs[a], stats.cs[b], p1, p2, edge.pred))
+    c1 = max(1.0, star_cardinality(s1, stats, sel, True, use_cache=use_cache))
+    c2 = max(1.0, star_cardinality(s2, stats, sel, True, use_cache=use_cache))
+    out = min(1.0, links / (c1 * c2))
+    if use_cache:
+        memo[key] = out
+    return out
 
 
 # --------------------------------------------------------------------------
@@ -149,6 +212,95 @@ class JoinTree:
         return self.left.leaf_order() + self.right.leaf_order()  # type: ignore[union-attr]
 
 
+def _star_edge_statistics(graph: StarGraph, stats: FederatedStats,
+                          sel: SourceSelection, distinct: bool,
+                          use_cache: bool = True,
+                          ) -> tuple[list[float], list[float]]:
+    """Per-star cardinalities and per-edge selectivities (same values on both
+    paths; the cached path memoizes on the selection / statistics objects)."""
+    star_card = [max(star_cardinality(s, stats, sel, distinct, use_cache=use_cache), 0.0)
+                 for s in graph.stars]
+    edge_sel = [edge_selectivity(e, graph, stats, sel, distinct, use_cache=use_cache)
+                for e in graph.edges]
+    return star_card, edge_sel
+
+
+# -- vectorized bitmask DP ---------------------------------------------------
+
+# Proper nonempty submasks of an s-element set, as an (n_t, s) bit matrix in
+# the reference enumeration order: popcount ascending, combination-lex within
+# a popcount.  Depends only on s, cached across calls.
+_SUBMASK_BITS: dict[int, np.ndarray] = {}
+
+
+def _submask_bits(s: int) -> np.ndarray:
+    bits = _SUBMASK_BITS.get(s)
+    if bits is None:
+        ts = [sum(1 << j for j in sub)
+              for k in range(1, s) for sub in combinations(range(s), k)]
+        t = np.asarray(ts, np.int64)
+        bits = ((t[:, None] >> np.arange(s, dtype=np.int64)) & 1).astype(np.int64)
+        _SUBMASK_BITS[s] = bits
+    return bits
+
+
+# Per-layer index structures: everything about "subsets of popcount s over n
+# stars and their partitions" is graph-independent, so it is computed once per
+# star count and reused across queries.  Entry per layer s = 2..n:
+#   S_layer (n_S,)   masks of popcount s, ascending
+#   idx_mat (n_S, s) bit positions of each mask, ascending
+#   pow2    (n_S, s) = 1 << idx_mat
+#   A, B    (n_t, n_S) submask / complement pairs of each mask, rows in the
+#                      reference enumeration order
+_LAYER_CACHE: dict[int, list] = {}
+_LAYER_CACHE_MAX_N = 10  # 3^10 ≈ 59k candidate pairs; bigger n is built per call
+
+
+def _layers(n: int) -> list:
+    layers = _LAYER_CACHE.get(n)
+    if layers is not None:
+        return layers
+    masks = np.arange(1 << n, dtype=np.int64)
+    pop = np.zeros(1 << n, np.int64)
+    for i in range(n):
+        pop += (masks >> i) & 1
+    layers = []
+    for s in range(2, n + 1):
+        S_layer = masks[pop == s]
+        bitmat = ((S_layer[:, None] >> np.arange(n, dtype=np.int64)) & 1) == 1
+        idx_mat = np.nonzero(bitmat)[1].reshape(len(S_layer), s).astype(np.int64)
+        pow2 = np.int64(1) << idx_mat
+        A = _submask_bits(s) @ pow2.T
+        B = S_layer[None, :] ^ A
+        layers.append((S_layer, idx_mat, pow2, A, B, np.arange(len(S_layer))))
+    if n <= _LAYER_CACHE_MAX_N:
+        _LAYER_CACHE[n] = layers
+    return layers
+
+
+def _subset_cardinalities(graph: StarGraph, star_card: list[float],
+                          edge_sel: list[float], masks: np.ndarray) -> np.ndarray:
+    """`card[m]` = Π star_card over members · Π edge selectivities of edges
+    inside `m` (each (min, max, pred) key counted once, first edge wins).
+    Folds run member-ascending then edge-ascending — the same multiplication
+    order as the reference's per-subset products."""
+    n = len(graph.stars)
+    card = np.ones(len(masks))
+    for i in range(n):
+        member = ((masks >> i) & 1) == 1
+        card[member] *= star_card[i]
+    seen: set[tuple[int, int, int | None]] = set()
+    for k, e in enumerate(graph.edges):
+        key = (min(e.src, e.dst), max(e.src, e.dst), e.pred)
+        if key in seen:
+            continue
+        seen.add(key)
+        em = (1 << e.src) | (1 << e.dst)
+        inside = (masks & em) == em
+        card[inside] *= edge_sel[k]
+    return card
+
+
 def dp_join_order(
     graph: StarGraph,
     stats: FederatedStats,
@@ -156,25 +308,194 @@ def dp_join_order(
     cost_model: CostModel | None = None,
     distinct: bool = True,
 ) -> JoinTree:
-    """Exact bitmask DP over connected star subsets (paper: "dynamic
-    programming becomes affordable" because #stars << #triple patterns).
+    """Exact DP over connected star subsets, vectorized over bitmasks.
 
-    Candidate plans per subset:
+    Candidate plans per subset (same space as ``dp_join_order_ref``):
       * exclusive-group leaf — every star served by the same single source:
         the merged subquery runs remotely, only results ship (§3.4 subquery
         optimization, folded into the DP);
       * hash join of two subplans (both results at the engine);
       * bind join of a subplan with a leaf-able right side (bindings shipped
         out, matches shipped back — replaces the right leaf's transfer).
-    """
+
+    Subsets are integer bitmasks.  Per-subset cardinality and neighborhood
+    arrays are precomputed once; subset connectivity is filled in layer by
+    layer (a set is connected iff dropping some member keeps it connected and
+    that member has a neighbor inside).  Each popcount layer then costs every
+    (subset, partition) candidate with one set of array ops and reduces with
+    ``argmin`` — first minimum == the reference's tie-breaking."""
     cm = cost_model or CostModel()
     n = len(graph.stars)
-    star_card = [max(star_cardinality(s, stats, sel, distinct), 0.0) for s in graph.stars]
-    edge_sel = [edge_selectivity(e, graph, stats, sel, distinct) for e in graph.edges]
+    if n > MAX_BITMASK_STARS:
+        return dp_join_order_ref(graph, stats, sel, cm, distinct, use_cache=True)
+    star_card, edge_sel = _star_edge_statistics(graph, stats, sel, distinct)
+    if n == 1:
+        ss = frozenset([0])
+        card0 = star_card[0]
+        return JoinTree("leaf", ss, card0, cm.leaf_cost(card0, sel.star_sources[0]),
+                        sources=list(sel.star_sources[0]))
+
+    size = 1 << n
+    masks = np.arange(size, dtype=np.int64)
+    card = _subset_cardinalities(graph, star_card, edge_sel, masks)
+
+    # neighborhoods (all edges, including generic/duplicate ones)
+    adj = np.zeros(n, np.int64)
+    for e in graph.edges:
+        adj[e.src] |= np.int64(1) << e.dst
+        adj[e.dst] |= np.int64(1) << e.src
+    nbr = np.zeros(size, np.int64)
+    for i in range(n):
+        member = ((masks >> i) & 1) == 1
+        nbr[member] |= adj[i]
+
+    # exclusive groups: stars pinned to exactly one source
+    single_src = np.full(n, -1, np.int64)
+    single_mask = np.int64(0)
+    for i, srcs in enumerate(sel.star_sources):
+        if len(srcs) == 1:
+            single_src[i] = srcs[0]
+            single_mask |= np.int64(1) << i
+
+    # per-mask best-plan state (cost == inf encodes "no plan")
+    INF = np.inf
+    cost = np.full(size, INF)
+    conn = np.zeros(size, bool)
+    bindable = np.zeros(size, bool)         # leaf with >=1 source
+    n_src = np.zeros(size, np.int64)
+    src_w = np.ones(size)
+    STRAT_SINGLE, STRAT_EXCL, STRAT_HASH, STRAT_BIND = 1, 2, 3, 4
+    strat = np.zeros(size, np.int8)
+    split = np.zeros(size, np.int64)
+    excl_of = np.full(size, -1, np.int64)
+
+    for i in range(n):
+        m = 1 << i
+        srcs = sel.star_sources[i]
+        cost[m] = cm.leaf_cost(star_card[i], srcs)
+        conn[m] = True
+        bindable[m] = len(srcs) > 0
+        n_src[m] = len(srcs)
+        src_w[m] = cm.src_w(srcs)
+        strat[m] = STRAT_SINGLE
+
+    for (S_layer, idx_mat, pow2, A, B, arange_cols) in _layers(n):
+        conn_l = None
+        if single_mask:
+            S_col = S_layer[:, None]
+            # connectivity (used only to gate exclusive-group leaves): S is
+            # connected iff some member i has a neighbor in S and S \ {i} is
+            # connected (spanning-tree leaf argument)
+            conn_l = (conn[S_col ^ pow2] & ((adj[idx_mat] & S_col) != 0)).any(axis=1)
+            conn[S_layer] = conn_l
+
+        card_S = card[S_layer]
+        hj = cm.hash_join_cost_v(card_S)
+        cost_a = cost[A]
+        cross = (nbr[A] & B) != 0
+        hash_c = cost_a + cost[B]
+        hash_c += hj
+        hash_c[~cross] = INF
+
+        bl = bindable[B] & cross
+        if bl.any():
+            bind_c = cost_a + cm.bind_join_cost_v(card[A], card_S, n_src[B], src_w[B])
+            bind_c[~bl] = INF
+        else:
+            bind_c = None
+
+        excl_c = None
+        excl_ok = None
+        excl_w = 1.0
+        if single_mask:
+            in_single = (S_layer & ~single_mask) == 0
+            if in_single.any():
+                srcs_mat = single_src[idx_mat]
+                excl_ok = (in_single & (srcs_mat == srcs_mat[:, :1]).all(axis=1)
+                           & conn_l)
+                if excl_ok.any():
+                    if cm.source_weight:
+                        excl_w = np.array([cm.src_w([int(x)]) for x in srcs_mat[:, 0]])
+                    excl_c = np.where(excl_ok,
+                                      cm.leaf_cost_v(card_S, 1, excl_w), INF)
+
+        cand = np.empty((1 + 2 * len(A), len(S_layer)))
+        cand[0] = INF if excl_c is None else excl_c
+        cand[1::2] = hash_c
+        cand[2::2] = INF if bind_c is None else bind_c
+        win = np.argmin(cand, axis=0)
+        best = cand[win, arange_cols]
+        okm = np.isfinite(best)
+        if not okm.any():
+            continue
+        Sm, wm, cols = S_layer[okm], win[okm], arange_cols[okm]
+        cost[Sm] = best[okm]
+        is_excl = wm == 0
+        strat[Sm] = np.where(is_excl, STRAT_EXCL, STRAT_HASH + ((wm - 1) & 1))
+        split[Sm] = np.where(is_excl, 0, A[(wm - 1) >> 1, cols])
+        if is_excl.any():
+            bindable[Sm] = is_excl
+            n_src[Sm] = np.where(is_excl, 1, 0)
+            ew = excl_w[cols] if isinstance(excl_w, np.ndarray) else excl_w
+            src_w[Sm] = np.where(is_excl, ew, 1.0)
+            excl_of[Sm] = np.where(is_excl, single_src[idx_mat[cols, 0]], -1)
+
+    def build(m: int) -> JoinTree:
+        ss = frozenset(i for i in range(n) if (m >> i) & 1)
+        st = int(strat[m])
+        if st == STRAT_SINGLE:
+            i = next(iter(ss))
+            return JoinTree("leaf", ss, star_card[i], float(cost[m]),
+                            sources=list(sel.star_sources[i]))
+        if st == STRAT_EXCL:
+            return JoinTree("leaf", ss, float(card[m]), float(cost[m]),
+                            sources=[int(excl_of[m])])
+        am = int(split[m])
+        return JoinTree("join", ss, float(card[m]), float(cost[m]),
+                        build(am), build(m ^ am),
+                        "hash" if st == STRAT_HASH else "bind")
+
+    full = size - 1
+    if np.isfinite(cost[full]):
+        return build(full)
+    # disconnected query: cartesian-combine components by ascending cardinality
+    comps = _components(graph)
+    trees = sorted((build(sum(1 << i for i in c)) for c in comps),
+                   key=lambda t: t.cardinality)
+    tree = trees[0]
+    for t in trees[1:]:
+        cardx = tree.cardinality * t.cardinality
+        tree = JoinTree("join", tree.stars | t.stars, cardx,
+                        tree.cost + t.cost + cm.intermediate_weight * cardx,
+                        tree, t, "hash", None)
+    return tree
+
+
+# -- reference DP (oracle) ---------------------------------------------------
+
+def dp_join_order_ref(
+    graph: StarGraph,
+    stats: FederatedStats,
+    sel: SourceSelection,
+    cost_model: CostModel | None = None,
+    distinct: bool = True,
+    use_cache: bool = False,
+) -> JoinTree:
+    """The original frozenset-subset DP (paper: "dynamic programming becomes
+    affordable" because #stars << #triple patterns), with unmemoized
+    statistics by default — the seed implementation, kept as the reference
+    oracle and benchmark baseline for ``dp_join_order``.  Same plan space,
+    same tie-breaking, identical statistics values.  (``dp_join_order``'s
+    beyond-``MAX_BITMASK_STARS`` fallback calls this with ``use_cache=True``
+    to keep the memoization benefits.)"""
+    cm = cost_model or CostModel()
+    n = len(graph.stars)
+    star_card, edge_sel = _star_edge_statistics(graph, stats, sel, distinct,
+                                                use_cache=use_cache)
 
     def subset_card(ss: frozenset[int]) -> float:
         card = 1.0
-        for i in ss:
+        for i in sorted(ss):    # ascending, matching the bitmask path's fold
             card *= max(star_card[i], 0.0)
         counted: set[tuple[int, int, int | None]] = set()
         for k, e in enumerate(graph.edges):

@@ -5,18 +5,33 @@ join-order optimization, subquery optimization (merging), and plan emission.
 (``repro.engine.local`` / ``repro.engine.distributed``) execute, plus the
 paper's plan-level metrics (optimization time, #selected sources,
 #subqueries).
+
+Serving-scale additions on top of the paper:
+
+* **Plan cache** — plans are keyed by a canonical query signature
+  (``query_signature``: pattern structure with variables canonicalized by
+  first occurrence, constant ids verbatim, plus the DISTINCT flag).  A
+  repeated or templated query skips decomposition, source selection and the
+  join-order DP entirely; on a hit the cached plan is rebound to the incoming
+  query (variables renamed if the new query uses different names).
+* **Batch planning** — ``optimize_batch`` plans each distinct signature once
+  and rebinds the result for its duplicates; across distinct queries the
+  star-cardinality / link-selectivity evaluations are memoized on the shared
+  statistics objects, so a batch amortizes the statistics work its queries
+  have in common.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from collections import OrderedDict
+from dataclasses import dataclass, field, replace
 
 from repro.core.cost import CostModel
 from repro.core.decomposition import StarGraph, decompose
 from repro.core.federation import FederatedStats
 from repro.core.join_order import JoinTree, dp_join_order, order_star_patterns
 from repro.core.source_selection import SourceSelection, select_sources
-from repro.query.algebra import BGPQuery, TriplePattern
+from repro.query.algebra import BGPQuery, Const, Term, TriplePattern, Var
 
 
 @dataclass
@@ -52,6 +67,7 @@ class PhysicalPlan:
     selection: SourceSelection
     optimization_ms: float = 0.0
     fallback: bool = False                   # variable-predicate fallback
+    cached: bool = False                     # served from the plan cache
 
     def subqueries(self) -> list[SubqueryNode]:
         out: list[SubqueryNode] = []
@@ -78,15 +94,136 @@ class PhysicalPlan:
         return self.selection.pattern_source_count(self.graph)
 
 
-class OdysseyOptimizer:
-    """Cost-based federated optimizer over CS/CP statistics."""
+# --------------------------------------------------------------------------
+# Plan cache
+# --------------------------------------------------------------------------
 
-    def __init__(self, stats: FederatedStats, cost_model: CostModel | None = None):
+def query_signature(query: BGPQuery) -> tuple[tuple, tuple[str, ...]]:
+    """Canonical signature of a BGP query: pattern structure with variables
+    numbered by first occurrence, constant term ids verbatim, and the
+    DISTINCT flag.  Returns ``(signature, var_order)`` where ``var_order``
+    lists the query's variable names in canonical-index order (used to rebind
+    a cached plan onto a query that differs only in variable names).
+
+    Queries differing in any constant, in DISTINCT, or in pattern order get
+    distinct signatures; the projection does not affect the plan shape and is
+    re-attached from the incoming query on a hit.
+    """
+    names: dict[str, int] = {}
+
+    def term_key(t: Term) -> tuple:
+        if isinstance(t, Const):
+            return ("c", t.tid)
+        assert isinstance(t, Var)
+        return ("v", names.setdefault(t.name, len(names)))
+
+    pats = tuple((term_key(tp.s), term_key(tp.p), term_key(tp.o))
+                 for tp in query.patterns)
+    return (pats, bool(query.distinct)), tuple(names)
+
+
+class PlanCache:
+    """LRU map: query signature -> (PhysicalPlan, canonical var order)."""
+
+    def __init__(self, max_entries: int = 1024):
+        self.max_entries = max_entries
+        self._entries: OrderedDict[tuple, tuple[PhysicalPlan, tuple[str, ...]]] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get(self, sig: tuple) -> tuple[PhysicalPlan, tuple[str, ...]] | None:
+        entry = self._entries.get(sig)
+        if entry is None:
+            self.misses += 1
+            return None
+        self._entries.move_to_end(sig)
+        self.hits += 1
+        return entry
+
+    def put(self, sig: tuple, plan: PhysicalPlan, var_order: tuple[str, ...]) -> None:
+        self._entries[sig] = (plan, var_order)
+        self._entries.move_to_end(sig)
+        while len(self._entries) > self.max_entries:
+            self._entries.popitem(last=False)
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self.hits = 0
+        self.misses = 0
+
+
+def _rename_term(t: Term, ren: dict[str, str]) -> Term:
+    return Var(ren[t.name]) if isinstance(t, Var) else t
+
+
+def _rename_node(node: PlanNode, ren: dict[str, str]) -> PlanNode:
+    if isinstance(node, SubqueryNode):
+        pats = [TriplePattern(_rename_term(tp.s, ren), _rename_term(tp.p, ren),
+                              _rename_term(tp.o, ren)) for tp in node.patterns]
+        return SubqueryNode(stars=list(node.stars), patterns=pats,
+                            sources=list(node.sources),
+                            est_cardinality=node.est_cardinality)
+    assert isinstance(node, JoinPlanNode)
+    return JoinPlanNode(left=_rename_node(node.left, ren),
+                        right=_rename_node(node.right, ren),
+                        strategy=node.strategy,
+                        join_vars=sorted(ren[v] for v in node.join_vars),
+                        est_cardinality=node.est_cardinality)
+
+
+class OdysseyOptimizer:
+    """Cost-based federated optimizer over CS/CP statistics, with an LRU plan
+    cache in front of the full optimization pipeline."""
+
+    def __init__(self, stats: FederatedStats, cost_model: CostModel | None = None,
+                 plan_cache_size: int = 1024):
         self.stats = stats
         self.cost_model = cost_model or CostModel()
+        self.plan_cache: PlanCache | None = (
+            PlanCache(plan_cache_size) if plan_cache_size > 0 else None)
 
-    def optimize(self, query: BGPQuery) -> PhysicalPlan:
+    def optimize(self, query: BGPQuery, use_cache: bool = True) -> PhysicalPlan:
         t0 = time.perf_counter()
+        sig = var_order = None
+        if use_cache and self.plan_cache is not None:
+            sig, var_order = query_signature(query)
+            entry = self.plan_cache.get(sig)
+            if entry is not None:
+                plan = self._rebind(entry, var_order, query)
+                plan.optimization_ms = (time.perf_counter() - t0) * 1e3
+                return plan
+        plan = self._optimize_uncached(query, t0)
+        if sig is not None:
+            self.plan_cache.put(sig, plan, var_order)
+        return plan
+
+    def optimize_batch(self, queries: "list[BGPQuery]") -> "list[PhysicalPlan]":
+        """Plan a batch: each distinct signature is optimized once and rebound
+        for its duplicates; distinct queries still share memoized statistics.
+        Equivalent to ``[self.optimize(q) for q in queries]`` (and implemented
+        that way when the plan cache is enabled), but batching also dedupes
+        when the cache has been turned off."""
+        if self.plan_cache is not None:
+            return [self.optimize(q) for q in queries]
+        plans: list[PhysicalPlan] = []
+        local: dict[tuple, tuple[PhysicalPlan, tuple[str, ...]]] = {}
+        for q in queries:
+            t0 = time.perf_counter()
+            sig, var_order = query_signature(q)
+            entry = local.get(sig)
+            if entry is not None:
+                plan = self._rebind(entry, var_order, q)
+                plan.optimization_ms = (time.perf_counter() - t0) * 1e3
+            else:
+                plan = self._optimize_uncached(q, t0)
+                local[sig] = (plan, var_order)
+            plans.append(plan)
+        return plans
+
+    def _optimize_uncached(self, query: BGPQuery, t0: float) -> PhysicalPlan:
         graph = decompose(query)
         sel = select_sources(graph, self.stats)
         tree = dp_join_order(graph, self.stats, sel, self.cost_model, query.distinct)
@@ -95,6 +232,20 @@ class OdysseyOptimizer:
         plan.fallback = any(s.has_var_pred for s in graph.stars)
         plan.optimization_ms = (time.perf_counter() - t0) * 1e3
         return plan
+
+    def _rebind(self, entry: tuple[PhysicalPlan, tuple[str, ...]],
+                var_order: tuple[str, ...], query: BGPQuery) -> PhysicalPlan:
+        """Attach a cached plan to an equivalent incoming query.  Stars keep
+        their indices under variable renaming (decomposition groups patterns
+        by first occurrence of the subject), so the source selection carries
+        over; only variable names inside the plan tree may need rewriting."""
+        cached, cached_order = entry
+        if cached_order == var_order:
+            return replace(cached, query=query, cached=True)
+        ren = dict(zip(cached_order, var_order))
+        root = _rename_node(cached.root, ren)
+        return replace(cached, root=root, query=query, graph=decompose(query),
+                       cached=True)
 
     # -- plan emission with subquery merging (§3.4 step iii) ---------------
     def _emit(self, tree: JoinTree, graph: StarGraph, sel: SourceSelection,

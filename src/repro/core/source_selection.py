@@ -26,6 +26,9 @@ class SourceSelection:
     star_sources: list[list[int]]                        # per star
     star_cs: list[dict[int, np.ndarray]]                 # star -> {src: relevant CS}
     edge_pairs: dict[int, set[tuple[int, int]]] = field(default_factory=dict)
+    # memo for per-(star, preds) cardinalities / per-edge selectivities; the
+    # selection is per-query, so the memo's lifetime matches the planning call
+    _memo: dict = field(default_factory=dict, repr=False)
 
     def pattern_source_count(self, graph: StarGraph) -> int:
         """NSS metric: Σ over triple patterns of #selected sources."""

@@ -30,3 +30,26 @@ def workload(small_fed):
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+# -- smaller-scale federation for the fast tier ------------------------------
+# A fraction of small_fed's size: fast-tier tests (planner differentials,
+# plan-cache behavior) get a full 9-source federation without paying
+# small_fed's generation/statistics cost.
+
+@pytest.fixture(scope="session")
+def tiny_fed():
+    fed, gt = generate_federation(fedbench_like_spec(scale=0.06, seed=3))
+    return fed, gt
+
+
+@pytest.fixture(scope="session")
+def tiny_stats(tiny_fed):
+    fed, _ = tiny_fed
+    return build_federated_stats(fed)
+
+
+@pytest.fixture(scope="session")
+def tiny_workload(tiny_fed):
+    fed, gt = tiny_fed
+    return generate_workload(fed, gt, n_star=4, n_hybrid=4, n_path=2, seed=9)

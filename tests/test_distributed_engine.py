@@ -7,6 +7,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow  # multi-minute: subprocess + XLA compilation
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

@@ -1,0 +1,143 @@
+"""Differential tests: the vectorized bitmask DP (`dp_join_order`) must pick
+exactly the plan of the reference oracle (`dp_join_order_ref`) — same cost,
+same leaf order, same join strategies — on every query shape: star, hybrid,
+path, single-star, disconnected, and randomly generated multi-star graphs."""
+import numpy as np
+import pytest
+
+from repro.core.cost import CostModel
+from repro.core.decomposition import decompose
+from repro.core.join_order import dp_join_order, dp_join_order_ref
+from repro.core.source_selection import select_sources
+from repro.query.algebra import BGPQuery, Const, TriplePattern, Var
+
+
+def _tree_shape(t):
+    if t.kind == "leaf":
+        return ("leaf", tuple(sorted(t.stars)), tuple(t.sources or []))
+    return ("join", t.strategy, _tree_shape(t.left), _tree_shape(t.right))
+
+
+def _assert_equivalent(q, stats):
+    graph = decompose(q)
+    sel = select_sources(graph, stats)
+    cm = CostModel()
+    new = dp_join_order(graph, stats, sel, cm, q.distinct)
+    ref = dp_join_order_ref(graph, stats, sel, cm, q.distinct)
+    assert new.leaf_order() == ref.leaf_order(), q.name
+    assert _tree_shape(new) == _tree_shape(ref), q.name
+    np.testing.assert_allclose(new.cost, ref.cost, rtol=1e-9, atol=1e-12)
+    np.testing.assert_allclose(new.cardinality, ref.cardinality, rtol=1e-9, atol=1e-12)
+    return graph
+
+
+def test_bitmask_dp_matches_ref_on_workload(small_stats, workload):
+    """Full generated workload: star (ST), hybrid (CD-style), path queries."""
+    shapes = set()
+    for q in workload:
+        graph = _assert_equivalent(q, small_stats)
+        shapes.add(min(len(graph.stars), 3))
+    assert {1, 2} <= shapes, "workload should cover single- and multi-star queries"
+
+
+def test_bitmask_dp_single_pattern(small_stats, workload):
+    q0 = workload[0]
+    _assert_equivalent(BGPQuery([q0.patterns[0]], distinct=True), small_stats)
+    _assert_equivalent(BGPQuery([q0.patterns[0]], distinct=False), small_stats)
+
+
+def test_bitmask_dp_disconnected(small_stats, workload):
+    """Two independent stars (no shared variables) -> component fallback."""
+    stars = [q for q in workload if q.name.startswith("ST")]
+    assert len(stars) >= 2
+    a, b = stars[0], stars[1]
+
+    def rename(tp, suffix):
+        def r(t):
+            return Var(t.name + suffix) if isinstance(t, Var) else t
+        return TriplePattern(r(tp.s), r(tp.p), r(tp.o))
+
+    for distinct in (True, False):
+        q = BGPQuery([rename(tp, "_l") for tp in a.patterns]
+                     + [rename(tp, "_r") for tp in b.patterns], distinct=distinct)
+        graph = _assert_equivalent(q, small_stats)
+        assert len(graph.stars) >= 2
+
+
+def test_bitmask_dp_random_star_graphs(tiny_stats):
+    """Random chains of linked stars (3-7 meta-nodes) synthesized from the CP
+    statistics (shared generator with the planner micro-benchmark); includes
+    degenerate cases source selection prunes to zero sources."""
+    from benchmarks.planner_bench import chain_query
+
+    rng = np.random.default_rng(42)
+    n_cases = 0
+    for trial in range(40):
+        n_stars = int(rng.integers(3, 8))
+        q = chain_query(tiny_stats, n_stars, k_extra=int(rng.integers(0, 3)), rng=rng)
+        q = BGPQuery(q.patterns, distinct=bool(rng.random() < 0.5), name=f"RG{trial}")
+        _assert_equivalent(q, tiny_stats)
+        n_cases += 1
+    assert n_cases >= 20
+
+
+def test_bitmask_dp_uses_bind_joins(small_stats, workload):
+    """The DP's plan space is actually exercised: across the workload, plans
+    contain joins and at least one of them is a bind join."""
+    strategies = set()
+    for q in workload:
+        graph = decompose(q)
+        sel = select_sources(graph, small_stats)
+        tree = dp_join_order(graph, small_stats, sel, CostModel(), q.distinct)
+
+        def walk(t):
+            if t.kind == "leaf":
+                return
+            strategies.add(t.strategy)
+            walk(t.left)
+            walk(t.right)
+
+        walk(tree)
+    assert "bind" in strategies, f"no bind joins in the whole workload: {strategies}"
+    assert strategies <= {"hash", "bind"}
+
+
+def test_bitmask_dp_merges_exclusive_groups(tiny_fed):
+    """Single-source federation: linked stars pinned to the same source must
+    merge into one exclusive-group leaf (in both DP implementations)."""
+    from repro.core.characteristic_pairs import compute_characteristic_pairs
+    from repro.core.characteristic_sets import compute_characteristic_sets
+    from repro.core.federation import FederatedStats
+
+    fed, _ = tiny_fed
+    table = next(s.table for s in fed.sources
+                 if compute_characteristic_pairs(
+                     s.table, compute_characteristic_sets(s.table), 0).n_cp)
+    cs = compute_characteristic_sets(table)
+    cp = compute_characteristic_pairs(table, cs, 0)
+    stats = FederatedStats(cs=[cs], intra_cp=[cp])
+    rng = np.random.default_rng(7)
+    merged = 0
+    for _ in range(10):
+        r = int(rng.integers(cp.n_cp))
+        pred, cs1, cs2 = int(cp.pred[r]), int(cp.cs1[r]), int(cp.cs2[r])
+        pats = [TriplePattern(Var("x"), Const(int(p)), Var(f"xv{j}"))
+                for j, p in enumerate(cs.preds_of(cs1)[:2]) if int(p) != pred]
+        pats.append(TriplePattern(Var("x"), Const(pred), Var("y")))
+        pats += [TriplePattern(Var("y"), Const(int(p)), Var(f"yv{j}"))
+                 for j, p in enumerate(cs.preds_of(cs2)[:2])]
+        q = BGPQuery(pats, distinct=True)
+        graph = _assert_equivalent(q, stats)
+        if len(graph.stars) < 2:
+            continue
+        sel = select_sources(graph, stats)
+        tree = dp_join_order(graph, stats, sel, CostModel(), True)
+
+        def has_merge(t):
+            if t.kind == "leaf":
+                return len(t.stars) > 1
+            return has_merge(t.left) or has_merge(t.right)
+
+        if has_merge(tree):
+            merged += 1
+    assert merged >= 1, "no exclusive-group leaf in any single-source plan"

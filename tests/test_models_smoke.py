@@ -9,6 +9,8 @@ import pytest
 from repro.config.base import SHAPES, reduced_config
 from repro.configs import ARCH_IDS, get_arch
 from repro.models import model as MDL
+
+pytestmark = pytest.mark.slow  # ~2 min: one XLA compile per architecture
 from repro.train.optimizer import adamw
 from repro.train.train_step import make_train_step
 

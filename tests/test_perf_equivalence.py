@@ -9,6 +9,8 @@ import numpy as np
 import pytest
 
 from repro.config.base import PerfFlags, reduced_config
+
+pytestmark = pytest.mark.slow  # multi-minute: decode loops + gradient checks
 from repro.configs import get_arch
 from repro.models import model as MDL
 from repro.models.attention_chunked import chunked_gqa_attention

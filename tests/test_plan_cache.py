@@ -1,0 +1,170 @@
+"""Plan cache + batch planning: hits return byte-identical results with
+near-zero optimization time, keys distinguish constants / DISTINCT /
+structure, and ``optimize_batch`` matches per-query ``optimize``."""
+import numpy as np
+import pytest
+
+from repro.core.planner import OdysseyOptimizer, query_signature
+from repro.engine.local import LocalEngine, naive_evaluate
+from repro.query.algebra import BGPQuery, Const, TriplePattern, Var
+
+
+def _results(fed, plan, q):
+    rel, _ = LocalEngine(fed).execute(plan)
+    proj = q.effective_projection()
+    return {v: rel[v] for v in proj}
+
+
+def _plan_shape(node):
+    from repro.core.planner import JoinPlanNode, SubqueryNode
+
+    if isinstance(node, SubqueryNode):
+        return ("sq", tuple(node.stars), tuple(node.sources),
+                tuple((tp.s, tp.p, tp.o) for tp in node.patterns))
+    assert isinstance(node, JoinPlanNode)
+    return ("join", node.strategy, tuple(node.join_vars),
+            _plan_shape(node.left), _plan_shape(node.right))
+
+
+def _sig_distinct(queries):
+    out, seen = [], set()
+    for q in queries:
+        sig = query_signature(q)[0]
+        if sig not in seen:
+            seen.add(sig)
+            out.append(q)
+    return out
+
+
+def test_cache_hit_byte_identical_and_fast(tiny_fed, tiny_stats, tiny_workload):
+    fed, _ = tiny_fed
+    opt = OdysseyOptimizer(tiny_stats)
+    miss_ms = hit_ms = 0.0
+    queries = _sig_distinct(tiny_workload)
+    for q in queries:
+        p1 = opt.optimize(q)
+        p2 = opt.optimize(q)
+        assert not p1.cached and p2.cached
+        assert _plan_shape(p1.root) == _plan_shape(p2.root)
+        r1 = _results(fed, p1, q)
+        r2 = _results(fed, p2, q)
+        assert set(r1) == set(r2)
+        for v in r1:
+            assert r1[v].tobytes() == r2[v].tobytes()      # byte-identical
+            assert r1[v].dtype == r2[v].dtype
+        miss_ms += p1.optimization_ms
+        hit_ms += p2.optimization_ms
+    assert opt.plan_cache.hits == len(queries)
+    assert hit_ms < miss_ms / 5, (hit_ms, miss_ms)
+    assert hit_ms / len(queries) < 1.0                     # near-zero per hit
+
+
+def test_cache_hit_with_renamed_variables(tiny_fed, tiny_stats, tiny_workload):
+    """Variable names are canonicalized away: a renamed query hits the cache
+    and gets a correctly rebound plan."""
+    fed, _ = tiny_fed
+    opt = OdysseyOptimizer(tiny_stats)
+
+    def rename(t):
+        return Var("ren_" + t.name) if isinstance(t, Var) else t
+
+    for q in _sig_distinct(tiny_workload):
+        p1 = opt.optimize(q)
+        q2 = BGPQuery([TriplePattern(rename(tp.s), rename(tp.p), rename(tp.o))
+                       for tp in q.patterns], distinct=q.distinct,
+                      projection=["ren_" + v for v in q.projection])
+        p2 = opt.optimize(q2)
+        assert not p1.cached and p2.cached
+        r1 = _results(fed, p1, q)
+        r2 = _results(fed, p2, q2)
+        for v in r1:
+            assert r1[v].tobytes() == r2["ren_" + v].tobytes()
+        # correctness of the rebound plan against the oracle evaluator
+        got = set(zip(*[r2[v].tolist() for v in q2.effective_projection()])) \
+            if len(next(iter(r2.values()))) else set()
+        assert got == naive_evaluate(fed, q2)
+
+
+def test_cache_distinguishes_constants(tiny_fed, tiny_stats):
+    """Two templated queries differing only in a constant id must not share a
+    plan (their selectivities — and possibly sources — differ)."""
+    fed, _ = tiny_fed
+    src = fed.sources[0]
+    # a predicate with >= 2 distinct objects
+    pred = obj = None
+    for p in src.table.predicates():
+        objs = np.unique(src.table.o[src.table.p == p])
+        if len(objs) >= 2:
+            pred, obj = int(p), objs[:2].tolist()
+            break
+    assert pred is not None
+
+    def q_for(o):
+        return BGPQuery([TriplePattern(Var("x"), Const(pred), Const(int(o)))],
+                        distinct=True, projection=["x"])
+
+    qa, qb = q_for(obj[0]), q_for(obj[1])
+    assert query_signature(qa)[0] != query_signature(qb)[0]
+    opt = OdysseyOptimizer(tiny_stats)
+    pa = opt.optimize(qa)
+    pb = opt.optimize(qb)
+    assert not pb.cached and len(opt.plan_cache) == 2
+    for q, plan in ((qa, pa), (qb, pb)):
+        got = {r[0] for r in zip(*[
+            _results(fed, plan, q)[v].tolist() for v in q.effective_projection()])}
+        assert got == {r[0] for r in naive_evaluate(fed, q)}
+
+
+def test_cache_distinguishes_distinct_flag(tiny_stats, tiny_workload):
+    q = next(q for q in tiny_workload if len(q.patterns) >= 2)
+    qd = BGPQuery(q.patterns, distinct=True, projection=q.projection)
+    qn = BGPQuery(q.patterns, distinct=False, projection=q.projection)
+    assert query_signature(qd)[0] != query_signature(qn)[0]
+    opt = OdysseyOptimizer(tiny_stats)
+    opt.optimize(qd)
+    p2 = opt.optimize(qn)
+    assert not p2.cached and len(opt.plan_cache) == 2
+    assert opt.optimize(qn).cached  # and the second copy hits
+
+
+def test_cache_lru_eviction(tiny_stats, tiny_workload):
+    opt = OdysseyOptimizer(tiny_stats, plan_cache_size=2)
+    distinct_qs = _sig_distinct(tiny_workload)
+    assert len(distinct_qs) >= 3
+    for q in distinct_qs[:3]:
+        opt.optimize(q)
+    assert len(opt.plan_cache) == 2
+    # the oldest entry was evicted -> re-optimizing it is a miss
+    assert not opt.optimize(distinct_qs[0]).cached
+
+
+def test_optimize_batch_matches_per_query(tiny_fed, tiny_stats, tiny_workload):
+    fed, _ = tiny_fed
+    # duplicate the workload so the batch contains repeats
+    batch = list(tiny_workload) + list(tiny_workload)
+    plans_b = OdysseyOptimizer(tiny_stats).optimize_batch(batch)
+    singles = [OdysseyOptimizer(tiny_stats, plan_cache_size=0).optimize(q)
+               for q in batch]
+    assert len(plans_b) == len(singles) == len(batch)
+    for q, pb, ps in zip(batch, plans_b, singles):
+        assert _plan_shape(pb.root) == _plan_shape(ps.root)
+        rb = _results(fed, pb, q)
+        rs = _results(fed, ps, q)
+        for v in rb:
+            assert rb[v].tobytes() == rs[v].tobytes()
+
+
+def test_optimize_batch_dedupes_without_cache(tiny_fed, tiny_stats, tiny_workload):
+    """Batching dedupes identical signatures even with the cache disabled."""
+    fed, _ = tiny_fed
+    opt = OdysseyOptimizer(tiny_stats, plan_cache_size=0)
+    assert opt.plan_cache is None
+    batch = [tiny_workload[0]] * 3
+    plans = opt.optimize_batch(batch)
+    shapes = {_plan_shape(p.root) for p in plans}
+    assert len(shapes) == 1
+    for p in plans:
+        r = _results(fed, p, tiny_workload[0])
+        r0 = _results(fed, plans[0], tiny_workload[0])
+        for v in r:
+            assert r[v].tobytes() == r0[v].tobytes()

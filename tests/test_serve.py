@@ -10,6 +10,8 @@ from repro.configs import get_arch
 from repro.models import model as MDL
 from repro.serve.engine import Request, ServeEngine
 
+pytestmark = pytest.mark.slow  # long decode loops through XLA
+
 
 @pytest.fixture(scope="module")
 def small_lm():

@@ -3,6 +3,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # kernel sweep: one XLA compile per shape
+
 from repro.kernels import ref
 from repro.kernels.ssm_scan import ssm_scan
 

@@ -7,6 +7,8 @@ import pytest
 
 from repro.launch.train import main as train_main
 
+pytestmark = pytest.mark.slow  # full train/checkpoint/restart cycles
+
 
 def test_train_restart_bit_exact(tmp_path):
     """Run 6 steps straight vs 3 steps + restart + 3 steps: identical loss
