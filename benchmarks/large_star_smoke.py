@@ -1,0 +1,74 @@
+"""CI guard for the large-star planning path.
+
+Two probes, both under tracemalloc (numpy registers its buffers there, so
+the traced peak covers the DP's array allocations) plus a peak-RSS bound
+for everything else:
+
+* a 16-star *chain* at the default budget — a regression to dense 3^n
+  per-layer materialization (the old 14-star ``MAX_BITMASK_STARS`` cliff)
+  would need ~2 GB here and trips every limit immediately;
+* a 14-star *clique* under a small explicit ``block_bytes`` — every tile
+  pair survives the connectivity filter, so this is the shape where
+  per-pair under-accounting would silently blow the documented budget.
+
+    PYTHONPATH=src python -m benchmarks.large_star_smoke
+"""
+from __future__ import annotations
+
+import resource
+import sys
+import tracemalloc
+
+from repro.core.cost import CostModel
+from repro.core.join_order import DP_BLOCK_BYTES, dp_join_order
+from repro.rdf.shapes import shaped_planning_inputs
+
+CHAIN_STARS = 16
+CHAIN_PEAK_MB = 400       # DP allocations: budget (256 MB) + fixed 2^n state
+CLIQUE_STARS = 14
+CLIQUE_BLOCK_BYTES = 8 << 20
+CLIQUE_PEAK_MB = 32       # 8 MB budget + fixed state, 4x margin — the old
+                          # 5-7x under-accounting (or a dense regression)
+                          # lands far above this
+PEAK_RSS_MB = 1200        # whole interpreter, incl. imports
+
+
+def _plan_peak(shape: str, n_stars: int, seed: int,
+               block_bytes: int | None) -> float:
+    graph, stats, sel, q = shaped_planning_inputs(shape, n_stars, seed=seed)
+    tracemalloc.start()
+    tree = dp_join_order(graph, stats, sel, CostModel(), q.distinct,
+                         block_bytes=block_bytes)
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    assert sorted(tree.leaf_order()) == list(range(n_stars)), \
+        f"{shape}{n_stars}: invalid plan (leaves do not partition the stars)"
+    return peak / 2**20
+
+
+def main() -> int:
+    chain_mb = _plan_peak("chain", CHAIN_STARS, 45, None)
+    clique_mb = _plan_peak("clique", CLIQUE_STARS, 43, CLIQUE_BLOCK_BYTES)
+    ru_maxrss = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    rss_mb = ru_maxrss / (2**20 if sys.platform == "darwin" else 1024)
+    print(f"large-star smoke: {CHAIN_STARS}-star chain traced peak "
+          f"{chain_mb:.1f} MB (budget {DP_BLOCK_BYTES / 2**20:.0f} MB, limit "
+          f"{CHAIN_PEAK_MB} MB); {CLIQUE_STARS}-star clique traced peak "
+          f"{clique_mb:.1f} MB (budget {CLIQUE_BLOCK_BYTES >> 20} MB, limit "
+          f"{CLIQUE_PEAK_MB} MB); peak RSS {rss_mb:.1f} MB (limit {PEAK_RSS_MB} MB)")
+    if chain_mb > CHAIN_PEAK_MB:
+        print(f"FAIL: chain traced peak {chain_mb:.1f} MB > {CHAIN_PEAK_MB} MB "
+              "— the per-layer memory cliff is back")
+        return 1
+    if clique_mb > CLIQUE_PEAK_MB:
+        print(f"FAIL: clique traced peak {clique_mb:.1f} MB > {CLIQUE_PEAK_MB} "
+              "MB — dense tiles exceed the configured block budget")
+        return 1
+    if rss_mb > PEAK_RSS_MB:
+        print(f"FAIL: peak RSS {rss_mb:.1f} MB > {PEAK_RSS_MB} MB")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -136,10 +136,64 @@ def run(scale: float = 1.0, reps: int = 9, seeds_per_size: int = 2):
     return csv, "\n".join(lines)
 
 
+def run_large(quick: bool = False, reps: int = 3):
+    """Large-star scaling: the chunked + connected bitmask DP on synthetic
+    chains / trees / cliques past the old 14-star ``MAX_BITMASK_STARS``
+    cliff, with a reference-DP comparison at the largest size the reference
+    can run in bench time (acceptance: >= 3x at >= 14 stars) and the traced
+    peak of the DP's allocations (budget: ``DP_BLOCK_BYTES``)."""
+    import tracemalloc
+
+    from repro.core.join_order import DP_BLOCK_BYTES
+    from repro.rdf.shapes import shaped_planning_inputs
+
+    cm = CostModel()
+    ref_n = 12 if quick else 14
+    scenarios = ((("chain", (12, 14, 16)), ("tree", (14,)), ("clique", (12,)))
+                 if quick else
+                 (("chain", (14, 16, 18)), ("tree", (14, 16)), ("clique", (12, 14))))
+    lines_note = "no reference comparison ran"
+    csv: list[tuple] = []
+    lines = ["== Large-star planner scaling (chunked + connected bitmask DP) ==",
+             f"{'query':10}{'stars':>6}{'bitmask ms':>12}{'peak MB':>9}"
+             f"{'ref ms':>10}{'speedup':>9}"]
+    for shape, sizes in scenarios:
+        for n in sizes:
+            graph, stats, sel, q = shaped_planning_inputs(shape, n, seed=29 + n)
+            dp_join_order(graph, stats, sel, cm, q.distinct)      # warm memos
+            tracemalloc.start()
+            tree = dp_join_order(graph, stats, sel, cm, q.distinct)
+            _, peak = tracemalloc.get_traced_memory()
+            tracemalloc.stop()
+            peak_mb = peak / 2**20
+            assert peak <= DP_BLOCK_BYTES + (1 << 26), \
+                f"{shape}{n}: traced peak {peak_mb:.0f} MB blew the tile budget"
+            new_ms = _median_ms(
+                lambda: dp_join_order(graph, stats, sel, cm, q.distinct), reps)
+            row = f"{q.name:10}{n:>6}{new_ms:>12.2f}{peak_mb:>9.1f}"
+            derived = f"peak_{peak_mb:.1f}MB"
+            if shape == "chain" and n == ref_n:
+                t0 = time.perf_counter()
+                ref = dp_join_order_ref(graph, stats, sel, cm, q.distinct)
+                ref_ms = (time.perf_counter() - t0) * 1e3
+                assert tree.leaf_order() == ref.leaf_order()
+                assert np.isclose(tree.cost, ref.cost, rtol=1e-9)
+                speedup = ref_ms / max(new_ms, 1e-9)
+                row += f"{ref_ms:>10.1f}{speedup:>8.1f}x"
+                derived = f"{speedup:.1f}x_vs_ref_{derived}"
+                lines_note = (f"{ref_n}-star chain speedup vs reference DP: "
+                              f"{speedup:.1f}x (target >= 3x)")
+            lines.append(row)
+            csv.append((f"planner/large_{shape}_{n}star", new_ms * 1e3, derived))
+    lines.append(lines_note)
+    return csv, "\n".join(lines)
+
+
 if __name__ == "__main__":
     import sys
 
     csv, text = run(scale=0.25)
-    print(text, file=sys.stderr)
-    for name, us, derived in csv:
+    csv_l, text_l = run_large(quick=True)
+    print(text + "\n\n" + text_l, file=sys.stderr)
+    for name, us, derived in csv + csv_l:
         print(f"{name},{us:.3f},{derived}")

@@ -45,6 +45,7 @@ def main() -> None:
     add(F.fig8_transferred_tuples(runs))
     add(F.fig9_hybrids(runs))
     add(planner_bench.run(scale))
+    add(planner_bench.run_large(quick=args.quick))
     add(kernel_bench.run())
     add(roofline_bench.run())
 

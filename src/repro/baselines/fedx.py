@@ -36,24 +36,41 @@ class FedXOptimizer:
     def __init__(self, fed: Federation, warm: bool = False):
         self.fed = fed
         self.warm = warm
-        self._ask_cache: dict[tuple, list[int]] = {}
-        self.ask_count = 0
+        self._ask_cache: dict[tuple, list[int]] = {}   # warm: survives calls
+        self.ask_count = 0                             # real ASK requests sent
 
-    def _sources_for(self, tp: TriplePattern) -> list[int]:
-        key = tp.constants()
-        if key in self._ask_cache and self.warm:
-            return self._ask_cache[key]
+    def _probe(self, key: tuple) -> list[int]:
+        """One real ASK round: one request per endpoint, counted exactly."""
         s, p, o = key
         srcs = [i for i, src in enumerate(self.fed.sources) if src.ask(s, p, o)]
         self.ask_count += len(self.fed.sources)
-        if self.warm:
-            self._ask_cache[key] = srcs
         return srcs
+
+    def _sources_for(self, tp: TriplePattern,
+                     memo: dict[tuple, list[int]] | None = None) -> list[int]:
+        """Relevant sources for one pattern.  ``memo`` is the per-selection
+        probe memo (one ``optimize`` call == one source selection), so
+        patterns sharing an ASK signature cost a single probe round per
+        selection; warm mode keeps the memo across calls (FedX-Warm) while
+        cold mode re-probes per selection, FedX's documented cold behavior.
+        Returns a fresh list so callers can prune/mutate their copy without
+        corrupting the memo."""
+        key = tp.constants()
+        if self.warm:
+            memo = self._ask_cache
+        elif memo is None:
+            memo = {}
+        srcs = memo.get(key)
+        if srcs is None:
+            srcs = self._probe(key)
+            memo[key] = srcs
+        return list(srcs)
 
     def optimize(self, query: BGPQuery) -> PhysicalPlan:
         t0 = time.perf_counter()
         graph = decompose(query)
-        pat_sources = [self._sources_for(tp) for tp in query.patterns]
+        memo: dict[tuple, list[int]] = {}
+        pat_sources = [self._sources_for(tp, memo) for tp in query.patterns]
 
         # exclusive groups: patterns with the same singleton source
         groups: dict[int, list[int]] = {}

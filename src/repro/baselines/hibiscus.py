@@ -72,13 +72,16 @@ class HibiscusOptimizer(FedXOptimizer):
 
     def optimize(self, query: BGPQuery) -> PhysicalPlan:
         t0 = time.perf_counter()
-        pat_sources = [self._sources_for(tp) for tp in query.patterns]
+        # one probe memo for the whole selection: the probes here are the
+        # only real ASKs; super().optimize sees the pruned lists below
+        memo: dict[tuple, list[int]] = {}
+        pat_sources = [self._sources_for(tp, memo) for tp in query.patterns]
         pat_sources = self._prune_by_authorities(query, pat_sources)
         # reuse FedX ordering/grouping on the pruned sources
         orig = self._sources_for
         try:
             cache = {id(tp): srcs for tp, srcs in zip(query.patterns, pat_sources)}
-            self._sources_for = lambda tp: cache[id(tp)]  # type: ignore[assignment]
+            self._sources_for = lambda tp, memo=None: cache[id(tp)]  # type: ignore[assignment]
             plan = super().optimize(query)
         finally:
             self._sources_for = orig  # type: ignore[assignment]

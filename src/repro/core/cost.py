@@ -71,3 +71,21 @@ class CostModel:
         return (self.request_cost * n_req
                 + self.transfer_weight * card_out * src_w
                 + self.intermediate_weight * card_out)
+
+    def join_candidates_v(self, cost_a: np.ndarray, cost_b: np.ndarray,
+                          card_out: np.ndarray, hash_out: np.ndarray,
+                          card_a: np.ndarray, n_src_b: np.ndarray,
+                          src_w_b: np.ndarray,
+                          bindable_b: np.ndarray) -> "tuple[np.ndarray, np.ndarray]":
+        """Blockwise candidate costing for one flat tile of (A, B) partition
+        pairs: the hash-join cost of every pair, replaced by the bind-join
+        alternative where the right side is dispatchable as one subquery and
+        strictly cheaper.  Returns ``(cost, is_bind)``; hash wins ties
+        because the reference enumerates hash before bind.  ``hash_out`` is
+        ``hash_join_cost_v(card_out)``, precomputed once per subset so tiles
+        share it; operation order matches the scalar forms exactly."""
+        hc = cost_a + cost_b
+        hc = hc + hash_out
+        bc = cost_a + self.bind_join_cost_v(card_a, card_out, n_src_b, src_w_b)
+        is_bind = bindable_b & (bc < hc)
+        return np.where(is_bind, bc, hc), is_bind

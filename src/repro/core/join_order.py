@@ -12,11 +12,18 @@ Two DP implementations share the same plan space and cost model:
 ``dp_join_order``      vectorized bitmask DP — subsets are integer bitmasks,
                        per-subset cardinalities / connectivity / exclusive
                        groups are precomputed numpy arrays, and each popcount
-                       layer costs every (subset, partition) candidate with
-                       one set of array ops.  Star cardinalities and edge
-                       selectivities are memoized per query (and the
-                       underlying CS/CP formulas on the statistics objects,
-                       see ``repro.core.cardinality``), so batches of related
+                       layer costs its (subset, partition) candidates with
+                       array ops.  Only *connected* subsets are enumerated,
+                       and only partitions into two connected halves are
+                       costed (DPccp-style csg/cmp pairs — on chains and
+                       trees the layer work collapses from all ``2^n`` masks
+                       to the sparse connected family), in fixed-size tiles
+                       whose peak memory is bounded by ``block_bytes``
+                       (default ``DP_BLOCK_BYTES``) regardless of the star
+                       count.  Star cardinalities and edge selectivities are
+                       memoized per query (and the underlying CS/CP formulas
+                       on the statistics objects, see
+                       ``repro.core.cardinality``), so batches of related
                        queries amortize the statistics work.  This is the
                        optimizer hot path.
 ``dp_join_order_ref``  the original frozenset/`itertools.combinations`
@@ -53,11 +60,6 @@ from repro.core.source_selection import SourceSelection
 from repro.query.algebra import Const, TriplePattern, Var
 
 GENERIC_EDGE_SELECTIVITY = 1e-3  # fallback for non object->subject joins
-
-# Above this star count the bitmask DP's per-layer candidate matrices stop
-# fitting comfortably in memory; fall back to the reference DP (queries this
-# large are far past what either implementation handles interactively).
-MAX_BITMASK_STARS = 14
 
 
 def _bound_object_factor(star: Star, preds: list[int], stats: FederatedStats,
@@ -227,55 +229,74 @@ def _star_edge_statistics(graph: StarGraph, stats: FederatedStats,
 
 # -- vectorized bitmask DP ---------------------------------------------------
 
-# Proper nonempty submasks of an s-element set, as an (n_t, s) bit matrix in
-# the reference enumeration order: popcount ascending, combination-lex within
-# a popcount.  Depends only on s, cached across calls.
-_SUBMASK_BITS: dict[int, np.ndarray] = {}
+# Default budget (bytes) for a layer's candidate tiles.  When every pair of
+# a dense tile survives the connectivity filter, the live state per pair is
+# the int64 submask/complement matrices plus the compacted index, cost-model
+# input and candidate-cost arrays — ~150 bytes at the worst stage (measured
+# on clique layers) — so tiles are sized at ``block_bytes / _PAIR_BYTES``
+# pairs and the sweep materializes at most about ``block_bytes`` of
+# candidate state at any time regardless of star count — the knob that
+# removed the old 14-star ``MAX_BITMASK_STARS`` cliff.
+DP_BLOCK_BYTES = 256 * 1024 * 1024
+_PAIR_BYTES = 160
+
+# Proper nonempty submasks of an s-element set, *relative* to the set's bit
+# positions (bit j == j-th smallest member), in the reference enumeration
+# order: popcount ascending, combination-lex within a popcount.  Lex order on
+# ascending position tuples equals descending numeric order of the
+# bit-reversed mask, so the table is one stable lexsort.  Depends only on s,
+# cached across calls for the common sizes.
+_REL_SUBMASKS: dict[int, np.ndarray] = {}
+_REL_SUBMASK_CACHE_MAX_S = 16   # cache tables up to 2^16 entries (~0.5 MB)
 
 
-def _submask_bits(s: int) -> np.ndarray:
-    bits = _SUBMASK_BITS.get(s)
-    if bits is None:
-        ts = [sum(1 << j for j in sub)
-              for k in range(1, s) for sub in combinations(range(s), k)]
-        t = np.asarray(ts, np.int64)
-        bits = ((t[:, None] >> np.arange(s, dtype=np.int64)) & 1).astype(np.int64)
-        _SUBMASK_BITS[s] = bits
-    return bits
+def _rel_submasks(s: int) -> np.ndarray:
+    rel = _REL_SUBMASKS.get(s)
+    if rel is None:
+        t = np.arange(1, (1 << s) - 1, dtype=np.int64)
+        pop = np.zeros(len(t), np.int64)
+        rev = np.zeros(len(t), np.int64)
+        for j in range(s):
+            bit = (t >> j) & 1
+            pop += bit
+            rev |= bit << (s - 1 - j)
+        rel = t[np.lexsort((-rev, pop))]
+        if s <= _REL_SUBMASK_CACHE_MAX_S:
+            _REL_SUBMASKS[s] = rel
+    return rel
 
 
-# Per-layer index structures: everything about "subsets of popcount s over n
-# stars and their partitions" is graph-independent, so it is computed once per
-# star count and reused across queries.  Entry per layer s = 2..n:
-#   S_layer (n_S,)   masks of popcount s, ascending
-#   idx_mat (n_S, s) bit positions of each mask, ascending
-#   pow2    (n_S, s) = 1 << idx_mat
-#   A, B    (n_t, n_S) submask / complement pairs of each mask, rows in the
-#                      reference enumeration order
-_LAYER_CACHE: dict[int, list] = {}
-_LAYER_CACHE_MAX_N = 10  # 3^10 ≈ 59k candidate pairs; bigger n is built per call
+# Small-star fast path: for n <= 10 the *dense* per-layer structures (masks,
+# bit positions, and the full (submask A, complement B) matrices — at most
+# 3^10 ≈ 59k pairs) are graph-independent and tiny, so they are built once
+# per star count and reused across queries.  The sweep then skips the
+# per-call submask deposit entirely; enumeration order and reduction are
+# shared with the tiled path.  Entry per layer s = 2..n:
+#   (S_all (n_S,), idx (n_S, s), pow2 (n_S, s), A (n_t, n_S), B (n_t, n_S))
+_SKEL_CACHE: dict[int, list] = {}
+_SKEL_CACHE_MAX_N = 10
 
 
-def _layers(n: int) -> list:
-    layers = _LAYER_CACHE.get(n)
-    if layers is not None:
-        return layers
-    masks = np.arange(1 << n, dtype=np.int64)
-    pop = np.zeros(1 << n, np.int64)
-    for i in range(n):
-        pop += (masks >> i) & 1
-    layers = []
-    for s in range(2, n + 1):
-        S_layer = masks[pop == s]
-        bitmat = ((S_layer[:, None] >> np.arange(n, dtype=np.int64)) & 1) == 1
-        idx_mat = np.nonzero(bitmat)[1].reshape(len(S_layer), s).astype(np.int64)
-        pow2 = np.int64(1) << idx_mat
-        A = _submask_bits(s) @ pow2.T
-        B = S_layer[None, :] ^ A
-        layers.append((S_layer, idx_mat, pow2, A, B, np.arange(len(S_layer))))
-    if n <= _LAYER_CACHE_MAX_N:
-        _LAYER_CACHE[n] = layers
-    return layers
+def _layer_skeletons(n: int) -> list:
+    skel = _SKEL_CACHE.get(n)
+    if skel is None:
+        masks = np.arange(1 << n, dtype=np.int64)
+        pop = np.zeros(1 << n, np.int64)
+        for i in range(n):
+            pop += (masks >> i) & 1
+        skel = []
+        for s in range(2, n + 1):
+            S_all = masks[pop == s]
+            bitm = ((S_all[:, None] >> np.arange(n, dtype=np.int64)) & 1) == 1
+            idx = np.nonzero(bitm)[1].reshape(len(S_all), s).astype(np.int64)
+            pw = np.int64(1) << idx
+            rel = _rel_submasks(s)
+            A = np.zeros((len(rel), len(S_all)), np.int64)
+            for j in range(s):
+                A += ((rel >> j) & 1)[:, None] * pw[:, j][None, :]
+            skel.append((S_all, idx, pw, A, S_all[None, :] ^ A))
+        _SKEL_CACHE[n] = skel
+    return skel
 
 
 def _subset_cardinalities(graph: StarGraph, star_card: list[float],
@@ -307,6 +328,7 @@ def dp_join_order(
     sel: SourceSelection,
     cost_model: CostModel | None = None,
     distinct: bool = True,
+    block_bytes: int | None = None,
 ) -> JoinTree:
     """Exact DP over connected star subsets, vectorized over bitmasks.
 
@@ -318,16 +340,21 @@ def dp_join_order(
       * bind join of a subplan with a leaf-able right side (bindings shipped
         out, matches shipped back — replaces the right leaf's transfer).
 
-    Subsets are integer bitmasks.  Per-subset cardinality and neighborhood
-    arrays are precomputed once; subset connectivity is filled in layer by
-    layer (a set is connected iff dropping some member keeps it connected and
-    that member has a neighbor inside).  Each popcount layer then costs every
-    (subset, partition) candidate with one set of array ops and reduces with
-    ``argmin`` — first minimum == the reference's tie-breaking."""
+    Subsets are integer bitmasks.  Per-subset cardinalities are precomputed
+    once; subset connectivity is filled in layer by layer (a set is connected
+    iff dropping some member with a neighbor inside keeps it connected).  A
+    popcount layer enumerates only its *connected* subsets, and for each the
+    (submask A, complement B) partitions in the reference order — popcount
+    ascending, combination-lex within a popcount.  Partitions are generated
+    in tiles of at most ``block_bytes / _PAIR_BYTES`` candidates (peak tile
+    memory is bounded no matter the star count), filtered to connected A and
+    connected B (a cut of a connected subset always has a crossing edge, so the
+    explicit cross-edge test is implied), and only the surviving csg/cmp
+    pairs are costed.  Per-tile segmented first-minimum plus strictly-less
+    running updates across tiles reproduce the reference's first-strict-
+    minimum tie-breaking exactly, so both DPs return the same plan."""
     cm = cost_model or CostModel()
     n = len(graph.stars)
-    if n > MAX_BITMASK_STARS:
-        return dp_join_order_ref(graph, stats, sel, cm, distinct, use_cache=True)
     star_card, edge_sel = _star_edge_statistics(graph, stats, sel, distinct)
     if n == 1:
         ss = frozenset([0])
@@ -339,15 +366,11 @@ def dp_join_order(
     masks = np.arange(size, dtype=np.int64)
     card = _subset_cardinalities(graph, star_card, edge_sel, masks)
 
-    # neighborhoods (all edges, including generic/duplicate ones)
+    # star neighborhoods (all edges, including generic/duplicate ones)
     adj = np.zeros(n, np.int64)
     for e in graph.edges:
         adj[e.src] |= np.int64(1) << e.dst
         adj[e.dst] |= np.int64(1) << e.src
-    nbr = np.zeros(size, np.int64)
-    for i in range(n):
-        member = ((masks >> i) & 1) == 1
-        nbr[member] |= adj[i]
 
     # exclusive groups: stars pinned to exactly one source
     single_src = np.full(n, -1, np.int64)
@@ -379,66 +402,146 @@ def dp_join_order(
         src_w[m] = cm.src_w(srcs)
         strat[m] = STRAT_SINGLE
 
-    for (S_layer, idx_mat, pow2, A, B, arange_cols) in _layers(n):
-        conn_l = None
-        if single_mask:
-            S_col = S_layer[:, None]
-            # connectivity (used only to gate exclusive-group leaves): S is
-            # connected iff some member i has a neighbor in S and S \ {i} is
-            # connected (spanning-tree leaf argument)
-            conn_l = (conn[S_col ^ pow2] & ((adj[idx_mat] & S_col) != 0)).any(axis=1)
-            conn[S_layer] = conn_l
+    tile_elems = max(1, int(block_bytes or DP_BLOCK_BYTES) // _PAIR_BYTES)
+    # small-star fast path: dense per-layer structures cached across calls,
+    # taken whenever the whole dense layer set (< 3^n pairs) fits the budget
+    skel = (_layer_skeletons(n)
+            if n <= _SKEL_CACHE_MAX_N and tile_elems >= 3 ** n else None)
+    if skel is None:
+        pop = np.zeros(size, np.int64)
+        for i in range(n):
+            pop += (masks >> i) & 1
 
-        card_S = card[S_layer]
-        hj = cm.hash_join_cost_v(card_S)
-        cost_a = cost[A]
-        cross = (nbr[A] & B) != 0
-        hash_c = cost_a + cost[B]
-        hash_c += hj
-        hash_c[~cross] = INF
-
-        bl = bindable[B] & cross
-        if bl.any():
-            bind_c = cost_a + cm.bind_join_cost_v(card[A], card_S, n_src[B], src_w[B])
-            bind_c[~bl] = INF
+    for s in range(2, n + 1):
+        # layer connectivity: S is connected iff some member i has a neighbor
+        # in S and S \ {i} is connected (spanning-tree leaf argument)
+        if skel is not None:
+            S_all, idx_all, pow2_all, A_all, B_all = skel[s - 2]
+            S_col = S_all[:, None]
+            conn_s = (conn[S_col ^ pow2_all]
+                      & ((adj[idx_all] & S_col) != 0)).any(axis=1)
         else:
-            bind_c = None
-
-        excl_c = None
-        excl_ok = None
-        excl_w = 1.0
-        if single_mask:
-            in_single = (S_layer & ~single_mask) == 0
-            if in_single.any():
-                srcs_mat = single_src[idx_mat]
-                excl_ok = (in_single & (srcs_mat == srcs_mat[:, :1]).all(axis=1)
-                           & conn_l)
-                if excl_ok.any():
-                    if cm.source_weight:
-                        excl_w = np.array([cm.src_w([int(x)]) for x in srcs_mat[:, 0]])
-                    excl_c = np.where(excl_ok,
-                                      cm.leaf_cost_v(card_S, 1, excl_w), INF)
-
-        cand = np.empty((1 + 2 * len(A), len(S_layer)))
-        cand[0] = INF if excl_c is None else excl_c
-        cand[1::2] = hash_c
-        cand[2::2] = INF if bind_c is None else bind_c
-        win = np.argmin(cand, axis=0)
-        best = cand[win, arange_cols]
-        okm = np.isfinite(best)
-        if not okm.any():
+            S_all = masks[pop == s]
+            conn_s = np.zeros(len(S_all), bool)
+            for i in range(n):
+                bit = np.int64(1) << i
+                has = (S_all & bit) != 0
+                Si = S_all[has]
+                conn_s[has] |= conn[Si ^ bit] & ((adj[i] & Si) != 0)
+        conn[S_all] = conn_s
+        cols = S_all[conn_s]
+        n_cols = len(cols)
+        if n_cols == 0:
             continue
-        Sm, wm, cols = S_layer[okm], win[okm], arange_cols[okm]
-        cost[Sm] = best[okm]
-        is_excl = wm == 0
-        strat[Sm] = np.where(is_excl, STRAT_EXCL, STRAT_HASH + ((wm - 1) & 1))
-        split[Sm] = np.where(is_excl, 0, A[(wm - 1) >> 1, cols])
-        if is_excl.any():
-            bindable[Sm] = is_excl
-            n_src[Sm] = np.where(is_excl, 1, 0)
-            ew = excl_w[cols] if isinstance(excl_w, np.ndarray) else excl_w
-            src_w[Sm] = np.where(is_excl, ew, 1.0)
-            excl_of[Sm] = np.where(is_excl, single_src[idx_mat[cols, 0]], -1)
+
+        card_S = card[cols]
+        hj = cm.hash_join_cost_v(card_S)
+
+        # running per-subset best across tiles; strat 0 == no candidate yet.
+        # Seeded below with the exclusive-group leaf (candidate index 0 in
+        # the reference order), which pair candidates must beat strictly.
+        run_cost = np.full(n_cols, INF)
+        run_split = np.zeros(n_cols, np.int64)
+        run_strat = np.zeros(n_cols, np.int8)
+        excl_w = np.ones(n_cols)
+        excl_src = np.full(n_cols, -1, np.int64)
+
+        rel = _rel_submasks(s)
+        n_rows = len(rel)
+        if skel is not None:
+            row_block, col_block = n_rows, n_cols          # one dense tile
+            colidx = np.flatnonzero(conn_s)
+        else:
+            row_block = max(1, min(n_rows, tile_elems))
+            col_block = max(1, tile_elems // max(row_block, n))
+
+        for c0 in range(0, n_cols, col_block):
+            c1 = min(c0 + col_block, n_cols)
+            Sb = cols[c0:c1]
+            if skel is not None:
+                all_conn = n_cols == len(S_all)
+                sub = None if all_conn else colidx[c0:c1]
+                idx_b = idx_all if all_conn else idx_all[sub]
+            else:
+                bitm = ((Sb[:, None] >> np.arange(n, dtype=np.int64)) & 1) == 1
+                idx_b = np.nonzero(bitm)[1].reshape(len(Sb), s).astype(np.int64)
+                pow2_b = np.int64(1) << idx_b
+
+            if single_mask:
+                in_single = (Sb & ~single_mask) == 0
+                if in_single.any():
+                    srcs_mat = single_src[idx_b]
+                    excl_ok = in_single & (srcs_mat == srcs_mat[:, :1]).all(axis=1)
+                    excl_src[c0:c1] = srcs_mat[:, 0]
+                    if excl_ok.any():
+                        w = excl_w[c0:c1]
+                        if cm.source_weight:
+                            w = np.array([cm.src_w([int(x)]) for x in srcs_mat[:, 0]])
+                            excl_w[c0:c1] = w
+                        run_cost[c0:c1] = np.where(
+                            excl_ok, cm.leaf_cost_v(card_S[c0:c1], 1, w), INF)
+                        run_strat[c0:c1] = np.where(excl_ok, STRAT_EXCL,
+                                                    0).astype(np.int8)
+
+            for r0 in range(0, n_rows, row_block):
+                if skel is not None:
+                    A = A_all if all_conn else A_all[:, sub]
+                    B = B_all if all_conn else B_all[:, sub]
+                else:
+                    relb = rel[r0:r0 + row_block]
+                    # deposit the relative submasks into each column's bit
+                    # positions: A[r, c] has relb[r]'s bits at Sb[c]'s members
+                    A = np.zeros((len(relb), len(Sb)), np.int64)
+                    for j in range(s):
+                        A += ((relb >> j) & 1)[:, None] * pow2_b[:, j][None, :]
+                    B = Sb[None, :] ^ A
+                valid = conn[A] & conn[B]
+                if not valid.any():
+                    continue
+                ci, ri = np.nonzero(valid.T)   # col-major: rows asc per col
+                Af = A[ri, ci]
+                Bf = B[ri, ci]
+                del A, B, valid, ri            # dense tile state: off-peak
+                                               # before the per-pair gathers
+                gci = c0 + ci
+                pair_c, is_bind = cm.join_candidates_v(
+                    cost[Af], cost[Bf], card_S[gci], hj[gci],
+                    card[Af], n_src[Bf], src_w[Bf], bindable[Bf])
+                # ci is sorted; segment = run of equal column indices
+                change = np.empty(len(ci), bool)
+                change[0] = True
+                np.not_equal(ci[1:], ci[:-1], out=change[1:])
+                seg_starts = np.flatnonzero(change)
+                seg_cols = ci[seg_starts]
+                seg_min = np.minimum.reduceat(pair_c, seg_starts)
+                seg_of = np.cumsum(change) - 1
+                # first candidate attaining the segment minimum == the
+                # reference's first-strict-minimum tie-breaking
+                flat = np.where(pair_c == seg_min[seg_of],
+                                np.arange(len(ci)), len(ci))
+                first = np.minimum.reduceat(flat, seg_starts)
+                g = c0 + seg_cols
+                upd = seg_min < run_cost[g]
+                if upd.any():
+                    gu = g[upd]
+                    fu = first[upd]
+                    run_cost[gu] = seg_min[upd]
+                    run_split[gu] = Af[fu]
+                    run_strat[gu] = np.where(is_bind[fu], STRAT_BIND, STRAT_HASH)
+
+        ok = run_strat != 0
+        if not ok.any():
+            continue
+        S_ok = cols[ok]
+        st_ok = run_strat[ok]
+        is_excl = st_ok == STRAT_EXCL
+        cost[S_ok] = run_cost[ok]
+        strat[S_ok] = st_ok
+        split[S_ok] = np.where(is_excl, 0, run_split[ok])
+        bindable[S_ok] = is_excl
+        n_src[S_ok] = np.where(is_excl, 1, 0)
+        src_w[S_ok] = np.where(is_excl, excl_w[ok], 1.0)
+        excl_of[S_ok] = np.where(is_excl, excl_src[ok], -1)
 
     def build(m: int) -> JoinTree:
         ss = frozenset(i for i in range(n) if (m >> i) & 1)
@@ -485,9 +588,7 @@ def dp_join_order_ref(
     affordable" because #stars << #triple patterns), with unmemoized
     statistics by default — the seed implementation, kept as the reference
     oracle and benchmark baseline for ``dp_join_order``.  Same plan space,
-    same tie-breaking, identical statistics values.  (``dp_join_order``'s
-    beyond-``MAX_BITMASK_STARS`` fallback calls this with ``use_cache=True``
-    to keep the memoization benefits.)"""
+    same tie-breaking, identical statistics values."""
     cm = cost_model or CostModel()
     n = len(graph.stars)
     star_card, edge_sel = _star_edge_statistics(graph, stats, sel, distinct,

@@ -144,7 +144,8 @@ class PlanCache:
         return entry
 
     def put(self, sig: tuple, plan: PhysicalPlan, var_order: tuple[str, ...]) -> None:
-        self._entries[sig] = (plan, var_order)
+        # store a pristine tree: the caller keeps (and may mutate) `plan`
+        self._entries[sig] = (replace(plan, root=_copy_node(plan.root)), var_order)
         self._entries.move_to_end(sig)
         while len(self._entries) > self.max_entries:
             self._entries.popitem(last=False)
@@ -153,6 +154,21 @@ class PlanCache:
         self._entries.clear()
         self.hits = 0
         self.misses = 0
+
+
+def _copy_node(node: PlanNode) -> PlanNode:
+    """Fresh plan tree with fresh mutable fields.  Cached plans must never
+    share their ``root`` with plans handed to callers: engines and callers
+    adjust ``est_cardinality`` / ``sources`` in place, which would silently
+    corrupt every later cache hit."""
+    if isinstance(node, SubqueryNode):
+        return SubqueryNode(stars=list(node.stars), patterns=list(node.patterns),
+                            sources=list(node.sources),
+                            est_cardinality=node.est_cardinality)
+    assert isinstance(node, JoinPlanNode)
+    return JoinPlanNode(left=_copy_node(node.left), right=_copy_node(node.right),
+                        strategy=node.strategy, join_vars=list(node.join_vars),
+                        est_cardinality=node.est_cardinality)
 
 
 def _rename_term(t: Term, ren: dict[str, str]) -> Term:
@@ -179,11 +195,14 @@ class OdysseyOptimizer:
     cache in front of the full optimization pipeline."""
 
     def __init__(self, stats: FederatedStats, cost_model: CostModel | None = None,
-                 plan_cache_size: int = 1024):
+                 plan_cache_size: int = 1024, dp_block_bytes: int | None = None):
         self.stats = stats
         self.cost_model = cost_model or CostModel()
         self.plan_cache: PlanCache | None = (
             PlanCache(plan_cache_size) if plan_cache_size > 0 else None)
+        # peak bytes for the join-order DP's per-layer candidate tiles
+        # (None == repro.core.join_order.DP_BLOCK_BYTES)
+        self.dp_block_bytes = dp_block_bytes
 
     def optimize(self, query: BGPQuery, use_cache: bool = True) -> PhysicalPlan:
         t0 = time.perf_counter()
@@ -219,14 +238,16 @@ class OdysseyOptimizer:
                 plan.optimization_ms = (time.perf_counter() - t0) * 1e3
             else:
                 plan = self._optimize_uncached(q, t0)
-                local[sig] = (plan, var_order)
+                # pristine copy, same reason as PlanCache.put
+                local[sig] = (replace(plan, root=_copy_node(plan.root)), var_order)
             plans.append(plan)
         return plans
 
     def _optimize_uncached(self, query: BGPQuery, t0: float) -> PhysicalPlan:
         graph = decompose(query)
         sel = select_sources(graph, self.stats)
-        tree = dp_join_order(graph, self.stats, sel, self.cost_model, query.distinct)
+        tree = dp_join_order(graph, self.stats, sel, self.cost_model, query.distinct,
+                             block_bytes=self.dp_block_bytes)
         root = self._emit(tree, graph, sel, query)
         plan = PhysicalPlan(root=root, query=query, graph=graph, selection=sel)
         plan.fallback = any(s.has_var_pred for s in graph.stars)
@@ -241,7 +262,10 @@ class OdysseyOptimizer:
         over; only variable names inside the plan tree may need rewriting."""
         cached, cached_order = entry
         if cached_order == var_order:
-            return replace(cached, query=query, cached=True)
+            # deep-copy the tree: hits must not alias the cached plan's nodes
+            # (callers mutate est_cardinality/sources in place)
+            return replace(cached, root=_copy_node(cached.root), query=query,
+                           cached=True)
         ren = dict(zip(cached_order, var_order))
         root = _rename_node(cached.root, ren)
         return replace(cached, root=root, query=query, graph=decompose(query),

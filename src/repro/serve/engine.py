@@ -28,6 +28,7 @@ class Request:
     out: list[int] = field(default_factory=list)
     slot: int = -1
     done: bool = False
+    truncated: bool = False          # prompt clamped to the slot cache
     t_submit: float = 0.0
     t_done: float = 0.0
 
@@ -35,12 +36,15 @@ class Request:
 class ServeEngine:
     def __init__(self, cfg: ArchConfig, params, n_slots: int = 4,
                  ctx_len: int = 128, eos: int | None = None,
-                 use_prefill: bool = False):
+                 use_prefill: bool = False, overflow: str = "reject"):
+        if overflow not in ("reject", "truncate"):
+            raise ValueError(f"overflow must be 'reject' or 'truncate', got {overflow!r}")
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
         self.ctx = ctx_len
         self.eos = eos
+        self.overflow = overflow
         # prefill admission: run the whole prompt in one full-seq pass and
         # seed the slot's cache (decoder-only archs)
         self.use_prefill = use_prefill and not cfg.encdec
@@ -56,6 +60,19 @@ class ServeEngine:
 
     # -- host scheduler ------------------------------------------------------
     def submit(self, req: Request) -> None:
+        # the slot cache holds positions 0..ctx-1 and the decode loop retires
+        # a slot at pos == ctx-1, so a prompt may occupy at most ctx-1 lines
+        # (leaving >= 1 decode step); anything longer would run `pos` off the
+        # cache grid and scatter out of bounds
+        limit = self.ctx - 1
+        if len(req.prompt) > limit:
+            if self.overflow == "reject":
+                raise ValueError(
+                    f"prompt of {len(req.prompt)} tokens exceeds the slot cache "
+                    f"(ctx_len={self.ctx}, max prompt {limit}); shorten it or "
+                    f"construct the engine with overflow='truncate'")
+            req.prompt = req.prompt[-limit:]    # keep the newest context
+            req.truncated = True
         req.t_submit = time.perf_counter()
         self.queue.append(req)
 
@@ -89,10 +106,7 @@ class ServeEngine:
                 req.out.append(tok)
                 if (len(req.out) >= req.max_new
                         or (self.eos is not None and tok == self.eos)):
-                    req.done = True
-                    req.t_done = time.perf_counter()
-                    self.finished.append(req)
-                    del self.active[slot]
+                    self._retire(slot, req)
                     free.insert(0, slot)
 
     def step(self) -> None:
@@ -121,10 +135,18 @@ class ServeEngine:
                 if (len(req.out) >= req.max_new
                         or (self.eos is not None and tok == self.eos)
                         or self.pos[slot] >= self.ctx - 1):
-                    req.done = True
-                    req.t_done = time.perf_counter()
-                    self.finished.append(req)
-                    del self.active[slot]
+                    self._retire(slot, req)
+            elif self.pos[slot] >= self.ctx - 1:
+                # prompt longer than the slot cache: retire before `pos` runs
+                # off the grid (defense in depth — ``submit`` clamps/rejects)
+                req.truncated = True
+                self._retire(slot, req)
+
+    def _retire(self, slot: int, req: Request) -> None:
+        req.done = True
+        req.t_done = time.perf_counter()
+        self.finished.append(req)
+        del self.active[slot]
 
     def run_until_done(self, max_steps: int = 10_000) -> list[Request]:
         steps = 0

@@ -1,0 +1,80 @@
+"""ASK-probe accounting in the FedX/HiBISCuS baselines: probes are memoized
+per source selection (one ``optimize`` call), ``ask_count`` counts only real
+probe rounds, warm mode never re-probes a known pattern signature, and the
+warm cache cannot be corrupted through returned source lists."""
+import pytest
+
+from repro.baselines import FedXOptimizer, HibiscusOptimizer
+from repro.query.algebra import BGPQuery, TriplePattern, Var
+
+
+def _query_with_duplicate_signature(workload):
+    """A workload query plus an extra pattern sharing an ASK signature with an
+    existing one (same constants, different variable names)."""
+    q = next(q for q in workload
+             if any(isinstance(tp.s, Var) and isinstance(tp.o, Var)
+                    for tp in q.patterns))
+    tp = next(tp for tp in q.patterns
+              if isinstance(tp.s, Var) and isinstance(tp.o, Var))
+    dup = TriplePattern(Var("dup_s"), tp.p, Var("dup_o"))
+    assert dup.constants() == tp.constants()
+    return BGPQuery(q.patterns + [dup], distinct=q.distinct, name="dupq")
+
+
+def _n_keys(q):
+    return len({tp.constants() for tp in q.patterns})
+
+
+def test_fedx_cold_probes_once_per_selection(tiny_fed, tiny_workload):
+    """Cold mode re-probes per optimize call (FedX-Cold semantics) but within
+    one selection every distinct ASK signature is probed exactly once."""
+    fed, _ = tiny_fed
+    opt = FedXOptimizer(fed, warm=False)
+    q = _query_with_duplicate_signature(tiny_workload)
+    per_call = _n_keys(q) * len(fed.sources)
+    assert per_call < len(q.patterns) * len(fed.sources)  # dup really dedupes
+    opt.optimize(q)
+    assert opt.ask_count == per_call
+    opt.optimize(q)
+    assert opt.ask_count == 2 * per_call
+
+
+def test_fedx_warm_never_reprobes(tiny_fed, tiny_workload):
+    fed, _ = tiny_fed
+    opt = FedXOptimizer(fed, warm=True)
+    q = _query_with_duplicate_signature(tiny_workload)
+    per_call = _n_keys(q) * len(fed.sources)
+    p1 = opt.optimize(q)
+    assert opt.ask_count == per_call
+    p2 = opt.optimize(q)
+    assert opt.ask_count == per_call          # warm: zero new probes
+    assert [sq.sources for sq in p1.subqueries()] == \
+        [sq.sources for sq in p2.subqueries()]
+
+
+@pytest.mark.parametrize("warm", [False, True])
+def test_hibiscus_counts_real_probes_only(tiny_fed, tiny_workload, warm):
+    """HiBISCuS probes once per signature per selection (its FedX superclass
+    pass reuses the already-probed, pruned lists) and warm mode adds zero
+    probes on repeat."""
+    fed, _ = tiny_fed
+    opt = HibiscusOptimizer(fed, warm=warm)
+    q = _query_with_duplicate_signature(tiny_workload)
+    per_call = _n_keys(q) * len(fed.sources)
+    opt.optimize(q)
+    assert opt.ask_count == per_call
+    opt.optimize(q)
+    assert opt.ask_count == (per_call if warm else 2 * per_call)
+
+
+def test_warm_cache_isolated_from_caller_mutation(tiny_fed, tiny_workload):
+    """Returned source lists are copies: pruning/mutating them must not
+    corrupt the warm ASK cache."""
+    fed, _ = tiny_fed
+    opt = FedXOptimizer(fed, warm=True)
+    tp = next(tp for q in tiny_workload for tp in q.patterns)
+    first = opt._sources_for(tp)
+    first.append(10_000)
+    again = opt._sources_for(tp)
+    assert 10_000 not in again
+    assert opt.ask_count == len(fed.sources)  # second lookup hit the cache

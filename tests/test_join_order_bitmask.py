@@ -141,3 +141,80 @@ def test_bitmask_dp_merges_exclusive_groups(tiny_fed):
         if has_merge(tree):
             merged += 1
     assert merged >= 1, "no exclusive-group leaf in any single-source plan"
+
+
+# -- chunked + connected enumeration (the large-star path) --------------------
+
+def test_rel_submasks_match_reference_enumeration_order():
+    """The lexsort-built submask table must equal the reference order:
+    popcount ascending, itertools.combinations-lex within a popcount."""
+    from itertools import combinations
+
+    from repro.core.join_order import _rel_submasks
+
+    for s in range(2, 11):
+        want = [sum(1 << j for j in sub)
+                for k in range(1, s) for sub in combinations(range(s), k)]
+        assert _rel_submasks(s).tolist() == want, f"s={s}"
+
+
+def _assert_shaped_equivalent(shape, n_stars, seed, block_bytes=None):
+    from repro.rdf.shapes import shaped_planning_inputs
+
+    graph, stats, sel, q = shaped_planning_inputs(shape, n_stars, seed)
+    assert len(graph.stars) == n_stars
+    cm = CostModel()
+    new = dp_join_order(graph, stats, sel, cm, q.distinct, block_bytes=block_bytes)
+    ref = dp_join_order_ref(graph, stats, sel, cm, q.distinct)
+    assert new.leaf_order() == ref.leaf_order(), (shape, n_stars)
+    assert _tree_shape(new) == _tree_shape(ref), (shape, n_stars)
+    np.testing.assert_allclose(new.cost, ref.cost, rtol=1e-9, atol=1e-12)
+    np.testing.assert_allclose(new.cardinality, ref.cardinality, rtol=1e-9,
+                               atol=1e-12)
+
+
+def test_large_star_differential_n12():
+    """Past the old 14-star fallback regime's test sizes: chunked + connected
+    enumeration still returns the reference's exact plan at 12 stars."""
+    _assert_shaped_equivalent("chain", 12, seed=5)
+    _assert_shaped_equivalent("tree", 12, seed=17)
+
+
+@pytest.mark.slow
+def test_large_star_differential_n13_n14():
+    """The sizes the old MAX_BITMASK_STARS fallback used to silently punt on:
+    the bitmask path must match the reference oracle bit-for-bit."""
+    _assert_shaped_equivalent("chain", 14, seed=3)
+    _assert_shaped_equivalent("tree", 13, seed=11)
+
+
+def test_chunked_tiles_identical_plans():
+    """A tiny block budget forces many row/column tiles; the running
+    first-strict-minimum reduction must preserve the exact plan (including
+    tie-breaking) of the single-tile run and of the reference."""
+    for shape, n_stars, seed in (("clique", 9, 7), ("chain", 12, 7), ("tree", 10, 7)):
+        _assert_shaped_equivalent(shape, n_stars, seed, block_bytes=2048)
+
+
+def test_18_star_chain_plans_through_bitmask_path():
+    """Acceptance: an 18-star chain plans through the bitmask DP (no
+    fallback exists anymore), tiled and untiled runs agree exactly, and the
+    plan is a valid join tree over all 18 stars."""
+    from repro.rdf.shapes import shaped_planning_inputs
+
+    graph, stats, sel, q = shaped_planning_inputs("chain", 18, seed=1)
+    cm = CostModel()
+    tree = dp_join_order(graph, stats, sel, cm, q.distinct)
+    assert sorted(tree.leaf_order()) == list(range(18))
+
+    def check(t):
+        if t.kind == "leaf":
+            return set(t.stars)
+        ls, rs = check(t.left), check(t.right)
+        assert not (ls & rs) and set(t.stars) == ls | rs
+        return set(t.stars)
+
+    assert check(tree) == set(range(18))
+    tiled = dp_join_order(graph, stats, sel, cm, q.distinct, block_bytes=1 << 20)
+    assert tiled.leaf_order() == tree.leaf_order()
+    assert tiled.cost == tree.cost

@@ -127,6 +127,38 @@ def test_cache_distinguishes_distinct_flag(tiny_stats, tiny_workload):
     assert opt.optimize(qn).cached  # and the second copy hits
 
 
+def test_cache_hit_isolated_from_caller_mutation(tiny_stats, tiny_workload):
+    """Regression: hits used to return the cached plan's `root` tree by
+    reference, so engine/caller mutation of est_cardinality/sources corrupted
+    every later hit.  Both the miss plan and each hit must own their tree."""
+    from repro.core.planner import JoinPlanNode, SubqueryNode
+
+    def mutate(node):
+        node.est_cardinality = -1.0
+        if isinstance(node, SubqueryNode):
+            node.sources.append(999)
+            node.stars.append(999)
+        else:
+            assert isinstance(node, JoinPlanNode)
+            node.join_vars.append("corrupted")
+            mutate(node.left)
+            mutate(node.right)
+
+    opt = OdysseyOptimizer(tiny_stats)
+    q = next(q for q in tiny_workload if len(q.patterns) >= 2)
+    p1 = opt.optimize(q)
+    shape = _plan_shape(p1.root)
+    mutate(p1.root)                       # caller corrupts the miss plan
+    p2 = opt.optimize(q)
+    assert p2.cached
+    assert _plan_shape(p2.root) == shape  # hit unaffected by miss mutation
+    mutate(p2.root)                       # caller corrupts a hit
+    p3 = opt.optimize(q)
+    assert p3.cached
+    assert _plan_shape(p3.root) == shape  # later hits unaffected too
+    assert all(sq.est_cardinality >= 0.0 for sq in p3.subqueries())
+
+
 def test_cache_lru_eviction(tiny_stats, tiny_workload):
     opt = OdysseyOptimizer(tiny_stats, plan_cache_size=2)
     distinct_qs = _sig_distinct(tiny_workload)

@@ -180,6 +180,76 @@ def star_graph_queries(draw, max_stars=6):
     return table, BGPQuery(pats, distinct=distinct)
 
 
+@st.composite
+def large_shaped_cases(draw):
+    """Random chain/tree star graphs at 16-18 meta-nodes — past anything the
+    reference DP can verify in test time, so the properties below are
+    invariants rather than differentials."""
+    shape = draw(st.sampled_from(["chain", "tree"]))
+    n_stars = draw(st.integers(16, 18))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return shape, n_stars, seed
+
+
+@given(large_shaped_cases())
+@settings(max_examples=6, deadline=None)
+def test_large_star_dp_plan_validity(case):
+    """16-18-star chains/trees: the plan is a join tree whose leaves
+    partition the full star set, with costs monotone along every path (a
+    join is never cheaper than the subplan it extends)."""
+    from repro.core.cost import CostModel
+    from repro.core.join_order import dp_join_order
+    from repro.rdf.shapes import shaped_planning_inputs
+
+    shape, n_stars, seed = case
+    graph, stats, sel, q = shaped_planning_inputs(shape, n_stars, seed)
+    tree = dp_join_order(graph, stats, sel, CostModel(), q.distinct)
+    assert sorted(tree.leaf_order()) == list(range(n_stars))
+
+    def walk(t):
+        if t.kind == "leaf":
+            assert t.cost >= 0.0
+            return set(t.stars)
+        ls, rs = walk(t.left), walk(t.right)
+        assert not (ls & rs), "overlapping leaf sets"
+        assert set(t.stars) == ls | rs, "join stars != union of children"
+        # both strategies keep the left subplan's cost as a summand
+        assert t.cost >= t.left.cost - 1e-9
+        return set(t.stars)
+
+    assert walk(tree) == set(range(n_stars))
+
+
+@given(large_shaped_cases())
+@settings(max_examples=6, deadline=None)
+def test_large_star_dp_not_worse_than_left_deep(case):
+    """The exact DP's cost is <= the greedy left-deep hash-join plan in node
+    order (which is in the DP's search space: chain/tree prefixes are always
+    connected by construction)."""
+    from repro.core.cost import CostModel
+    from repro.core.join_order import (_subset_cardinalities, dp_join_order,
+                                       edge_selectivity, star_cardinality)
+    from repro.rdf.shapes import shaped_planning_inputs
+
+    shape, n_stars, seed = case
+    graph, stats, sel, q = shaped_planning_inputs(shape, n_stars, seed)
+    cm = CostModel()
+    tree = dp_join_order(graph, stats, sel, cm, q.distinct)
+
+    cards = [max(star_cardinality(st, stats, sel, q.distinct), 0.0)
+             for st in graph.stars]
+    sels = [edge_selectivity(e, graph, stats, sel, q.distinct)
+            for e in graph.edges]
+    pmasks = np.array([(1 << k) - 1 for k in range(2, n_stars + 1)], np.int64)
+    pcards = _subset_cardinalities(graph, cards, sels, pmasks)
+    # fold exactly like the DP costs its hash joins: (left + leaf) + join
+    ld = cm.leaf_cost(cards[0], sel.star_sources[0])
+    for k in range(1, n_stars):
+        ld = (ld + cm.leaf_cost(cards[k], sel.star_sources[k]))
+        ld = ld + cm.hash_join_cost(pcards[k - 1])
+    assert tree.cost <= ld * (1 + 1e-9) + 1e-9
+
+
 @given(star_graph_queries())
 @settings(max_examples=25, deadline=None)
 def test_bitmask_dp_equals_reference_on_random_star_graphs(case):

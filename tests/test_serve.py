@@ -100,3 +100,37 @@ def test_serve_slot_reuse(small_lm):
     done = eng.run_until_done()
     assert len(done) == 3
     assert all(len(r.out) == 3 for r in done)
+
+
+def test_serve_rejects_prompt_longer_than_ctx(small_lm):
+    """Regression: a prompt >= ctx_len used to be admitted and run `pos` off
+    the slot cache grid; it must be rejected at submit."""
+    cfg, params = small_lm
+    eng = ServeEngine(cfg, params, n_slots=1, ctx_len=16)
+    with pytest.raises(ValueError, match="exceeds the slot cache"):
+        eng.submit(Request(rid=0, prompt=list(range(1, 21)), max_new=4))
+    assert not eng.queue and not eng.active
+    # the boundary case (ctx - 1 tokens) is still admitted and retires cleanly
+    eng.submit(Request(rid=1, prompt=list(range(1, 16)), max_new=4))
+    done = eng.run_until_done()
+    assert len(done) == 1 and done[0].done and len(done[0].out) >= 1
+    assert int(eng.pos.max()) <= eng.ctx
+
+
+def test_serve_truncate_overlong_prompt_matches_reference(small_lm):
+    """overflow='truncate' keeps the newest ctx-1 tokens; decode then matches
+    the single-request reference on the truncated prompt, and the slot
+    retires at the cache boundary without running past the grid."""
+    cfg, params = small_lm
+    prompt = list(range(1, 25))                      # 24 tokens > ctx 16
+    eng = ServeEngine(cfg, params, n_slots=2, ctx_len=16, overflow="truncate")
+    eng.submit(Request(rid=0, prompt=list(prompt), max_new=4))
+    done = eng.run_until_done()
+    assert len(done) == 1
+    req = done[0]
+    assert req.truncated and req.done
+    assert req.prompt == prompt[-15:]                # newest ctx-1 tokens
+    want = _reference_greedy(cfg, params, prompt[-15:], len(req.out))
+    assert req.out == want
+    assert 1 <= len(req.out) <= 4
+    assert int(eng.pos.max()) <= eng.ctx
