@@ -20,7 +20,7 @@ def main() -> None:
     scale = args.scale if args.scale is not None else (0.25 if args.quick else 1.0)
 
     from benchmarks import fedbench_figs as F
-    from benchmarks import kernel_bench, planner_bench, roofline_bench
+    from benchmarks import kernel_bench, planner_bench, roofline_bench, stats_refresh_bench
     from benchmarks.common import run_all
 
     csv_rows: list[tuple] = []
@@ -46,6 +46,8 @@ def main() -> None:
     add(F.fig9_hybrids(runs))
     add(planner_bench.run(scale))
     add(planner_bench.run_large(quick=args.quick))
+    # --quick (the CI smoke) asserts incremental failover >= 3x full rebuild
+    add(stats_refresh_bench.run(scale, assert_speedup=args.quick))
     add(kernel_bench.run())
     add(roofline_bench.run())
 

@@ -1,0 +1,113 @@
+"""Statistics-lifecycle micro-benchmark: incremental mutators vs full rebuild.
+
+Measures what an endpoint death costs the serving path:
+
+  * ``full``        — the pre-lifecycle behavior: ``build_federated_stats``
+                      over the surviving federation, fresh optimizer, replan.
+  * ``incremental`` — ``FederatedStats.remove_source`` on a clone + replan.
+  * ``refresh``     — ``refresh_source`` of one (hub) source + replan vs the
+                      same-size full rebuild + replan (the statistics-refresh
+                      path the lifecycle unblocks; apples-to-apples: both
+                      sides cover all N sources and plan the same query).
+
+The CI benchmark smoke (``benchmarks.run --quick``) asserts incremental
+failover is >= MIN_SPEEDUP x the full rebuild so lifecycle cost cannot
+regress silently; ``python -m benchmarks.stats_refresh_bench`` does the same
+standalone.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import fixture
+from benchmarks.planner_bench import planner_query
+from repro.core.federation import build_federated_stats
+from repro.core.planner import OdysseyOptimizer
+from repro.rdf.dataset import Federation, Source
+
+MIN_SPEEDUP = 3.0
+DEAD = "DBpedia"   # the hub source: worst case for pair recomputation
+
+
+def _median_ms(fn, reps: int = 3) -> float:
+    out = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        out.append((time.perf_counter() - t0) * 1e3)
+    return float(np.median(out))
+
+
+def run(scale: float = 0.25, assert_speedup: bool = False, reps: int = 3):
+    fed, _, stats, _ = fixture(scale)
+    q = planner_query(stats, n_stars=5, seed=23)
+    sid = next(i for i, s in enumerate(fed.sources) if s.name == DEAD)
+    keep = [Source(s.name, s.table) for s in fed.sources if s.name != DEAD]
+    survivors = Federation(keep, fed.dictionary)
+
+    def full_rebuild():
+        st = build_federated_stats(survivors)
+        OdysseyOptimizer(st).optimize(q)
+
+    def full_rebuild_n():                  # refresh baseline: all N sources
+        st = build_federated_stats(fed)
+        OdysseyOptimizer(st).optimize(q)
+
+    # steady-state serving warmed the formula memos before the death; the
+    # lifecycle's claim is exactly that survivors' statistics (arrays *and*
+    # memos, shared by clone) are reused, while the rebuild starts cold
+    OdysseyOptimizer(stats.clone()).optimize(q)
+
+    def incremental():
+        st = stats.clone()
+        st.remove_source(sid)
+        OdysseyOptimizer(st).optimize(q)   # true replan: cold plan cache
+
+    def refresh():
+        st = stats.clone()
+        st.refresh_source(sid, fed.sources[sid].table)
+        OdysseyOptimizer(st).optimize(q)
+
+    full_ms = _median_ms(full_rebuild, reps)
+    full_n_ms = _median_ms(full_rebuild_n, reps)
+    incr_ms = _median_ms(incremental, reps)
+    refresh_ms = _median_ms(refresh, reps)
+    speedup = full_ms / max(incr_ms, 1e-6)
+    refresh_speedup = full_n_ms / max(refresh_ms, 1e-6)
+
+    csv = [
+        ("stats_refresh/full_rebuild_us", full_ms * 1e3, f"{full_ms:.1f}ms"),
+        ("stats_refresh/full_rebuild_all_us", full_n_ms * 1e3, f"{full_n_ms:.1f}ms"),
+        ("stats_refresh/incremental_remove_us", incr_ms * 1e3, f"{incr_ms:.2f}ms"),
+        ("stats_refresh/refresh_source_us", refresh_ms * 1e3, f"{refresh_ms:.1f}ms"),
+        ("stats_refresh/remove_speedup", 0.0, f"{speedup:.1f}x"),
+        ("stats_refresh/refresh_speedup", 0.0, f"{refresh_speedup:.1f}x"),
+    ]
+    text = (
+        "statistics lifecycle (endpoint death / refresh, scale "
+        f"{scale}, {len(fed.sources)} sources)\n"
+        f"  full rebuild + replan (N-1 srcs)    : {full_ms:9.2f} ms\n"
+        f"  remove_source + replan              : {incr_ms:9.2f} ms  ({speedup:.1f}x)\n"
+        f"  full rebuild + replan (N srcs)      : {full_n_ms:9.2f} ms\n"
+        f"  refresh_source (hub) + replan       : {refresh_ms:9.2f} ms  ({refresh_speedup:.1f}x)"
+    )
+    if assert_speedup and speedup < MIN_SPEEDUP:
+        raise SystemExit(
+            f"stats lifecycle regression: incremental remove_source+replan is "
+            f"only {speedup:.1f}x the full rebuild (need >= {MIN_SPEEDUP}x)\n{text}")
+    return csv, text
+
+
+def main() -> None:
+    csv, text = run(scale=0.25, assert_speedup=True)
+    print(text, file=sys.stderr)
+    for name, us, derived in csv:
+        print(f"{name},{us:.3f},{derived}")
+    print("OK: incremental statistics lifecycle within budget", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

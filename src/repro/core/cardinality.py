@@ -168,6 +168,24 @@ def linked_star_cardinality_estimate_cached(
     return v
 
 
+def clear_card_caches(stats) -> None:
+    """Drop every memoized formula result (and predicate index) attached to
+    a ``FederatedStats``' CS/CP objects.
+
+    The statistics lifecycle rarely needs this: ``refresh_source`` replaces
+    the affected CS/CP objects (per-source cache scoping for free) and
+    ``remove_source`` invalidates nothing — surviving sources' caches are
+    keyed only on their own unchanged arrays.  Prefer
+    ``FederatedStats.invalidate_caches`` (which calls this *and* bumps the
+    epoch so the plan cache follows); this is only the object-level part."""
+    for cs in stats.cs:
+        cs.invalidate_caches()
+    for cp in stats.intra_cp:
+        cp.invalidate_caches()
+    for cp in stats.fed_cp.values():
+        cp.invalidate_caches()
+
+
 def join_selectivity(
     cp: CPStats,
     cs1: CSStats,

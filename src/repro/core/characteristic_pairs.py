@@ -54,6 +54,17 @@ class CPStats:
     def nbytes(self) -> int:
         return int(self.pred.nbytes + self.cs1.nbytes + self.cs2.nbytes + self.count.nbytes)
 
+    def retag(self, src1: int, src2: int) -> "CPStats":
+        """Renumber the source tags (statistics-lifecycle source removal).
+        The CS indices and counts are untouched, so the memoized-formula
+        cache — keyed only on predicate sets — stays valid."""
+        self.src1 = src1
+        self.src2 = src2
+        return self
+
+    def invalidate_caches(self) -> None:
+        self._card_cache.clear()
+
     @staticmethod
     def from_rows(pred: np.ndarray, cs1: np.ndarray, cs2: np.ndarray, count: np.ndarray,
                   src1: int = 0, src2: int = 0) -> "CPStats":

@@ -105,6 +105,14 @@ class CSStats:
             + self.pred_occ.nbytes + self.ent_ids.nbytes + self.ent_cs.nbytes
         )
 
+    def invalidate_caches(self) -> None:
+        """Drop the memoized formula results and the predicate inverted
+        index.  The statistics lifecycle normally invalidates by *replacing*
+        the CSStats object (refresh_source); this is the explicit hammer for
+        out-of-band array mutation."""
+        self._card_cache.clear()
+        self._pred_index.clear()
+
 
 def compute_characteristic_sets(table: TripleTable) -> CSStats:
     """Group the dataset's subjects by their exact predicate set.

@@ -59,6 +59,15 @@ class StarGraph:
         return [e for e in self.edges
                 if (e.src in a and e.dst in b) or (e.src in b and e.dst in a)]
 
+    def detach(self) -> "StarGraph":
+        """Copy with fresh Star/Edge containers (terms/patterns are immutable
+        and shared).  Plan-cache entries store and serve detached graphs so a
+        caller mutating a plan's graph cannot corrupt later hits."""
+        stars = [Star(s.idx, s.subject, list(s.patterns)) for s in self.stars]
+        edges = [Edge(src=e.src, dst=e.dst, pred=e.pred, pattern=e.pattern,
+                      generic=e.generic, var=e.var) for e in self.edges]
+        return StarGraph(stars=stars, edges=edges, query=self.query)
+
 
 def decompose(query: BGPQuery) -> StarGraph:
     by_subject: dict[object, list[TriplePattern]] = {}

@@ -15,11 +15,13 @@ surviving pairs are intersected exactly.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from dataclasses import replace as dc_replace
 
 import numpy as np
 
 from repro.core.characteristic_pairs import CPStats
 from repro.core.characteristic_sets import CSStats, compute_characteristic_sets
+from repro.core.summaries import DEFAULT_BITS as DEFAULT_SUMMARY_BITS
 from repro.core.summaries import EntitySummary, build_summary, candidate_cs_pairs
 from repro.rdf.dataset import Federation, TripleTable
 
@@ -200,12 +202,27 @@ def compute_federated_css(subj_a: LinkExport, subj_b: LinkExport) -> list[tuple[
 
 
 # --------------------------------------------------------------------------
-# Federation-wide statistics store
+# Federation-wide statistics store + versioned lifecycle
 # --------------------------------------------------------------------------
 
 @dataclass
 class FederatedStats:
-    """Everything the Odyssey optimizer needs, for all sources."""
+    """Everything the Odyssey optimizer needs, for all sources.
+
+    The store is *versioned*: ``epoch`` increases monotonically on every
+    mutation (``remove_source`` / ``add_source`` / ``refresh_source``), and
+    epoch-aware consumers (the plan cache) treat entries planned under an
+    older epoch as misses.  Mutators recompute only the affected source's
+    CS/CP/link-export/summary state plus the federated CPs incident to it —
+    the other sources' ``LinkExport``s are reused via Algorithm 1 — and are
+    differentially tested to be bit-identical to a from-scratch
+    ``build_federated_stats`` of the same federation.
+
+    Per-source cache scoping falls out of object replacement: a mutated
+    source's ``CSStats``/``CPStats`` objects (and their ``_card_cache``
+    memos) are replaced wholesale, while untouched sources keep their warm
+    caches, which stay valid because their underlying arrays are unchanged.
+    """
 
     cs: list[CSStats]                                  # per source
     intra_cp: list[CPStats]                            # per source
@@ -215,6 +232,20 @@ class FederatedStats:
     summaries: list[EntitySummary] = field(default_factory=list)
     pruning_checked: int = 0
     pruning_possible: int = 0
+    epoch: int = 0
+    # build-time configuration, carried so the incremental mutators reproduce
+    # exactly what build_federated_stats computes from scratch
+    use_summaries: bool = True
+    n_bits: int = DEFAULT_SUMMARY_BITS
+    max_cs: int | None = None
+    dictionary: object | None = None                   # TermDict of the federation
+    # per ordered source pair: (exact checks, possible pairs) from Algorithm 1
+    _pair_pruning: dict[tuple[int, int], tuple[int, int]] = field(
+        default_factory=dict, repr=False)
+
+    @property
+    def n_sources(self) -> int:
+        return len(self.cs)
 
     def cp_between(self, src1: int, src2: int) -> CPStats | None:
         if src1 == src2:
@@ -226,6 +257,168 @@ class FederatedStats:
         n += sum(c.nbytes() for c in self.fed_cp.values())
         n += sum(s.nbytes() for s in self.summaries)
         return int(n)
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def clone(self) -> "FederatedStats":
+        """Cheap detached copy: shares the statistics *arrays* (which are
+        never mutated in place) but owns every container and every src-tagged
+        wrapper, so incremental mutators on the clone never write through to
+        ``self`` — the safe starting point for a failover session or an A/B
+        statistics experiment over shared base stats."""
+        return FederatedStats(
+            cs=list(self.cs),
+            intra_cp=[dc_replace(c) for c in self.intra_cp],
+            fed_cp={k: dc_replace(c) for k, c in self.fed_cp.items()},
+            fed_cs={k: list(v) for k, v in self.fed_cs.items()},
+            exports=[dc_replace(e) for e in self.exports],
+            summaries=[dc_replace(s) for s in self.summaries],
+            pruning_checked=self.pruning_checked,
+            pruning_possible=self.pruning_possible,
+            epoch=self.epoch,
+            use_summaries=self.use_summaries,
+            n_bits=self.n_bits,
+            max_cs=self.max_cs,
+            dictionary=self.dictionary,
+            _pair_pruning=dict(self._pair_pruning),
+        )
+
+    def invalidate_caches(self) -> None:
+        """Blunt-hammer invalidation: drop every memoized formula and
+        predicate index on every CS/CP object and bump the epoch (so the
+        plan cache treats existing entries as stale).  The incremental
+        mutators do *not* need this (they scope invalidation by object
+        replacement); it exists for callers that mutate statistics arrays
+        out-of-band."""
+        from repro.core.cardinality import clear_card_caches
+
+        clear_card_caches(self)
+        self.epoch += 1
+
+    def _require_lifecycle(self) -> None:
+        if self.dictionary is None:
+            raise ValueError(
+                "statistics lifecycle needs the federation dictionary; build "
+                "this FederatedStats via build_federated_stats (or set "
+                ".dictionary) before calling remove/add/refresh_source")
+
+    def _local_stats(self, table: TripleTable, src: int):
+        """One source's CS / intra-CP / link-export / summary — exactly the
+        per-source loop body of ``build_federated_stats``."""
+        from repro.core.characteristic_pairs import compute_characteristic_pairs
+        from repro.stats.reduce import reduce_cs
+
+        auth = self.dictionary.authority_array()
+        kinds = np.asarray(self.dictionary.kinds, np.int8)
+        entity_mask = kinds == 0  # IRI
+        cs = compute_characteristic_sets(table)
+        if self.max_cs is not None and cs.n_cs > self.max_cs:
+            cs = reduce_cs(cs, self.max_cs)
+        cp = compute_characteristic_pairs(table, cs, src=src)
+        exp = export_link_stats(table, cs, src=src, entity_mask=entity_mask)
+        summ = (build_summary(table, cs, auth, src=src, n_bits=self.n_bits,
+                              entity_mask=entity_mask)
+                if self.use_summaries else None)
+        return cs, cp, exp, summ
+
+    def _compute_pair(self, i: int, j: int) -> None:
+        """(Re)run Algorithm 1 for the ordered pair (i, j), updating
+        ``fed_cp`` and the per-pair pruning ledger."""
+        res = compute_federated_cps(
+            self.exports[i], self.exports[j],
+            self.summaries[i] if self.use_summaries else None,
+            self.summaries[j] if self.use_summaries else None,
+        )
+        self._pair_pruning[(i, j)] = (res.n_checked_pairs, res.n_possible_pairs)
+        if res.cps.n_cp:
+            self.fed_cp[(i, j)] = res.cps
+        else:
+            self.fed_cp.pop((i, j), None)
+
+    def _refresh_pruning_totals(self) -> None:
+        self.pruning_checked = sum(c for c, _ in self._pair_pruning.values())
+        self.pruning_possible = sum(p for _, p in self._pair_pruning.values())
+
+    def remove_source(self, sid: int) -> None:
+        """Drop source ``sid`` and renumber the survivors — no statistic is
+        recomputed (every surviving CS/CP/export/summary is reused; only the
+        source tags and pair keys shift), so an N-source federation loses an
+        endpoint in O(#pairs) dict work instead of an O(N²) rebuild.  Pure
+        bookkeeping: unlike add/refresh it needs no build metadata, so it
+        also works on directly-constructed stats."""
+        if not 0 <= sid < self.n_sources:
+            raise IndexError(f"source {sid} out of range (n={self.n_sources})")
+        del self.cs[sid]
+        del self.intra_cp[sid]
+        if self.exports:                   # absent on directly-built stats
+            del self.exports[sid]
+        if self.summaries:
+            del self.summaries[sid]
+
+        def remap(i: int) -> int:
+            return i - 1 if i > sid else i
+
+        for j in range(sid, self.n_sources):
+            self.intra_cp[j].retag(j, j)
+            if self.exports:
+                self.exports[j].src = j
+            if self.summaries:
+                self.summaries[j].retag(j)
+        fed_cp: dict[tuple[int, int], CPStats] = {}
+        for (i, j), cp in self.fed_cp.items():
+            if sid in (i, j):
+                continue
+            cp.retag(remap(i), remap(j))
+            fed_cp[(remap(i), remap(j))] = cp
+        self.fed_cp = fed_cp
+        self.fed_cs = {(remap(i), remap(j)): v for (i, j), v in self.fed_cs.items()
+                       if sid not in (i, j)}
+        self._pair_pruning = {(remap(i), remap(j)): v
+                              for (i, j), v in self._pair_pruning.items()
+                              if sid not in (i, j)}
+        self._refresh_pruning_totals()
+        self.epoch += 1
+
+    def add_source(self, table: TripleTable) -> int:
+        """Append a new source (recovery / federation growth): compute its
+        local statistics plus the 2·N federated-CP pairs incident to it,
+        reusing every existing source's ``LinkExport``/summary.  Returns the
+        new source id."""
+        self._require_lifecycle()
+        src = self.n_sources
+        cs, cp, exp, summ = self._local_stats(table, src)
+        self.cs.append(cs)
+        self.intra_cp.append(cp)
+        self.exports.append(exp)
+        if self.use_summaries:
+            self.summaries.append(summ)
+        for i in range(src):
+            self._compute_pair(i, src)
+            self._compute_pair(src, i)
+        self._refresh_pruning_totals()
+        self.epoch += 1
+        return src
+
+    def refresh_source(self, sid: int, table: TripleTable) -> None:
+        """Re-derive source ``sid`` from (possibly changed) data: its local
+        CS/CP/export/summary state is replaced wholesale — which also retires
+        exactly its memoized-formula caches — and only the federated CPs
+        incident to it are recomputed."""
+        self._require_lifecycle()
+        if not 0 <= sid < self.n_sources:
+            raise IndexError(f"source {sid} out of range (n={self.n_sources})")
+        cs, cp, exp, summ = self._local_stats(table, sid)
+        self.cs[sid] = cs
+        self.intra_cp[sid] = cp
+        self.exports[sid] = exp
+        if self.use_summaries:
+            self.summaries[sid] = summ
+        for i in range(self.n_sources):
+            if i != sid:
+                self._compute_pair(i, sid)
+                self._compute_pair(sid, i)
+        self._refresh_pruning_totals()
+        self.epoch += 1
 
 
 def build_federated_stats(fed: Federation, use_summaries: bool = True,
@@ -254,18 +447,13 @@ def build_federated_stats(fed: Federation, use_summaries: bool = True,
             summaries.append(build_summary(src.table, cs, auth, src=i, n_bits=n_bits,
                                            entity_mask=entity_mask))
 
-    stats = FederatedStats(cs=cs_list, intra_cp=cp_list, exports=exports, summaries=summaries)
+    stats = FederatedStats(cs=cs_list, intra_cp=cp_list, exports=exports, summaries=summaries,
+                           use_summaries=use_summaries, n_bits=n_bits, max_cs=max_cs,
+                           dictionary=fed.dictionary)
     for i in range(len(fed.sources)):
         for j in range(len(fed.sources)):
             if i == j:
                 continue
-            res = compute_federated_cps(
-                exports[i], exports[j],
-                summaries[i] if use_summaries else None,
-                summaries[j] if use_summaries else None,
-            )
-            stats.pruning_checked += res.n_checked_pairs
-            stats.pruning_possible += res.n_possible_pairs
-            if res.cps.n_cp:
-                stats.fed_cp[(i, j)] = res.cps
+            stats._compute_pair(i, j)
+    stats._refresh_pruning_totals()
     return stats

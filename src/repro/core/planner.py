@@ -13,7 +13,11 @@ Serving-scale additions on top of the paper:
   first occurrence, constant ids verbatim, plus the DISTINCT flag).  A
   repeated or templated query skips decomposition, source selection and the
   join-order DP entirely; on a hit the cached plan is rebound to the incoming
-  query (variables renamed if the new query uses different names).
+  query (variables renamed if the new query uses different names).  Entries
+  are *epoch-keyed*: each records the statistics epoch it was planned under,
+  and a hit under a newer epoch (after ``FederatedStats.remove_source`` /
+  ``add_source`` / ``refresh_source``) is a miss — the stale entry is
+  lazily evicted and the structure-only signature re-warms naturally.
 * **Batch planning** — ``optimize_batch`` plans each distinct signature once
   and rebinds the result for its duplicates; across distinct queries the
   star-cardinality / link-selectivity evaluations are memoized on the shared
@@ -122,30 +126,54 @@ def query_signature(query: BGPQuery) -> tuple[tuple, tuple[str, ...]]:
     return (pats, bool(query.distinct)), tuple(names)
 
 
+@dataclass
+class CacheEntry:
+    plan: PhysicalPlan                        # pristine, detached copy
+    var_order: tuple[str, ...]
+    epoch: int = 0                            # stats epoch it was planned under
+
+
 class PlanCache:
-    """LRU map: query signature -> (PhysicalPlan, canonical var order)."""
+    """LRU map: query signature -> pristine plan + the statistics epoch it
+    was planned under.
+
+    Epoch-aware: a lookup under a *newer* epoch is a miss — the entry was
+    planned over statistics that have since been mutated (source removed,
+    added or refreshed), so its source ids and cardinalities may be stale.
+    Eviction is lazy: stale entries are dropped on touch, and because
+    ``query_signature`` is structure-only, a templated workload re-warms the
+    cache naturally after a refresh (first arrival per template replans, the
+    rest hit)."""
 
     def __init__(self, max_entries: int = 1024):
         self.max_entries = max_entries
-        self._entries: OrderedDict[tuple, tuple[PhysicalPlan, tuple[str, ...]]] = OrderedDict()
+        self._entries: OrderedDict[tuple, CacheEntry] = OrderedDict()
         self.hits = 0
         self.misses = 0
+        self.stale_evictions = 0
 
     def __len__(self) -> int:
         return len(self._entries)
 
-    def get(self, sig: tuple) -> tuple[PhysicalPlan, tuple[str, ...]] | None:
+    def get(self, sig: tuple, epoch: int | None = None) -> CacheEntry | None:
         entry = self._entries.get(sig)
         if entry is None:
+            self.misses += 1
+            return None
+        if epoch is not None and entry.epoch != epoch:
+            del self._entries[sig]            # lazy eviction of a stale plan
+            self.stale_evictions += 1
             self.misses += 1
             return None
         self._entries.move_to_end(sig)
         self.hits += 1
         return entry
 
-    def put(self, sig: tuple, plan: PhysicalPlan, var_order: tuple[str, ...]) -> None:
-        # store a pristine tree: the caller keeps (and may mutate) `plan`
-        self._entries[sig] = (replace(plan, root=_copy_node(plan.root)), var_order)
+    def put(self, sig: tuple, plan: PhysicalPlan, var_order: tuple[str, ...],
+            epoch: int = 0) -> None:
+        # store a pristine, detached plan: the caller keeps (and may mutate)
+        # `plan`, its tree, its selection and its graph
+        self._entries[sig] = CacheEntry(_detach_plan(plan), var_order, epoch)
         self._entries.move_to_end(sig)
         while len(self._entries) > self.max_entries:
             self._entries.popitem(last=False)
@@ -154,6 +182,17 @@ class PlanCache:
         self._entries.clear()
         self.hits = 0
         self.misses = 0
+        self.stale_evictions = 0
+
+
+def _detach_plan(plan: PhysicalPlan) -> PhysicalPlan:
+    """A plan that shares no mutable state with ``plan``: fresh tree, fresh
+    selection containers (empty per-query memo), fresh graph containers.
+    Without this, a caller mutating ``plan.selection.star_sources`` (exactly
+    what failover-style source exclusion does) corrupts every later hit."""
+    return replace(plan, root=_copy_node(plan.root),
+                   selection=plan.selection.detach(),
+                   graph=plan.graph.detach())
 
 
 def _copy_node(node: PlanNode) -> PlanNode:
@@ -204,19 +243,24 @@ class OdysseyOptimizer:
         # (None == repro.core.join_order.DP_BLOCK_BYTES)
         self.dp_block_bytes = dp_block_bytes
 
+    @property
+    def stats_epoch(self) -> int:
+        """Epoch of the underlying statistics (0 for legacy stats objects)."""
+        return getattr(self.stats, "epoch", 0)
+
     def optimize(self, query: BGPQuery, use_cache: bool = True) -> PhysicalPlan:
         t0 = time.perf_counter()
         sig = var_order = None
         if use_cache and self.plan_cache is not None:
             sig, var_order = query_signature(query)
-            entry = self.plan_cache.get(sig)
+            entry = self.plan_cache.get(sig, epoch=self.stats_epoch)
             if entry is not None:
                 plan = self._rebind(entry, var_order, query)
                 plan.optimization_ms = (time.perf_counter() - t0) * 1e3
                 return plan
         plan = self._optimize_uncached(query, t0)
         if sig is not None:
-            self.plan_cache.put(sig, plan, var_order)
+            self.plan_cache.put(sig, plan, var_order, epoch=self.stats_epoch)
         return plan
 
     def optimize_batch(self, queries: "list[BGPQuery]") -> "list[PhysicalPlan]":
@@ -228,7 +272,7 @@ class OdysseyOptimizer:
         if self.plan_cache is not None:
             return [self.optimize(q) for q in queries]
         plans: list[PhysicalPlan] = []
-        local: dict[tuple, tuple[PhysicalPlan, tuple[str, ...]]] = {}
+        local: dict[tuple, CacheEntry] = {}
         for q in queries:
             t0 = time.perf_counter()
             sig, var_order = query_signature(q)
@@ -238,8 +282,9 @@ class OdysseyOptimizer:
                 plan.optimization_ms = (time.perf_counter() - t0) * 1e3
             else:
                 plan = self._optimize_uncached(q, t0)
-                # pristine copy, same reason as PlanCache.put
-                local[sig] = (replace(plan, root=_copy_node(plan.root)), var_order)
+                # pristine detached copy, same reason as PlanCache.put
+                local[sig] = CacheEntry(_detach_plan(plan), var_order,
+                                        self.stats_epoch)
             plans.append(plan)
         return plans
 
@@ -254,22 +299,25 @@ class OdysseyOptimizer:
         plan.optimization_ms = (time.perf_counter() - t0) * 1e3
         return plan
 
-    def _rebind(self, entry: tuple[PhysicalPlan, tuple[str, ...]],
-                var_order: tuple[str, ...], query: BGPQuery) -> PhysicalPlan:
+    def _rebind(self, entry: CacheEntry, var_order: tuple[str, ...],
+                query: BGPQuery) -> PhysicalPlan:
         """Attach a cached plan to an equivalent incoming query.  Stars keep
         their indices under variable renaming (decomposition groups patterns
         by first occurrence of the subject), so the source selection carries
-        over; only variable names inside the plan tree may need rewriting."""
-        cached, cached_order = entry
+        over; only variable names inside the plan tree may need rewriting.
+
+        Every hit owns its tree, selection and graph: callers mutate
+        est_cardinality/sources/star_sources in place, and aliasing the
+        cached copy (or another hit) would corrupt every later hit."""
+        cached, cached_order = entry.plan, entry.var_order
         if cached_order == var_order:
-            # deep-copy the tree: hits must not alias the cached plan's nodes
-            # (callers mutate est_cardinality/sources in place)
             return replace(cached, root=_copy_node(cached.root), query=query,
-                           cached=True)
+                           selection=cached.selection.detach(),
+                           graph=cached.graph.detach(), cached=True)
         ren = dict(zip(cached_order, var_order))
         root = _rename_node(cached.root, ren)
         return replace(cached, root=root, query=query, graph=decompose(query),
-                       cached=True)
+                       selection=cached.selection.detach(), cached=True)
 
     # -- plan emission with subquery merging (§3.4 step iii) ---------------
     def _emit(self, tree: JoinTree, graph: StarGraph, sel: SourceSelection,

@@ -34,6 +34,18 @@ class SourceSelection:
         """NSS metric: Σ over triple patterns of #selected sources."""
         return sum(len(self.star_sources[s.idx]) * len(s.patterns) for s in graph.stars)
 
+    def detach(self) -> "SourceSelection":
+        """Copy with fresh containers and an *empty* memo.  Cached plans must
+        never hand out the stored selection by reference: a caller mutating
+        ``star_sources``/``star_cs`` (failover-style source exclusion does
+        exactly that) would corrupt every later cache hit, and the shared
+        ``_memo`` would outlive its documented per-query lifetime."""
+        return SourceSelection(
+            star_sources=[list(s) for s in self.star_sources],
+            star_cs=[dict(d) for d in self.star_cs],
+            edge_pairs={k: set(v) for k, v in self.edge_pairs.items()},
+        )
+
 
 def _star_relevant_cs(star: Star, stats: FederatedStats, src: int) -> np.ndarray:
     cs = stats.cs[src]
@@ -122,8 +134,28 @@ def select_sources(graph: StarGraph, stats: FederatedStats) -> SourceSelection:
             new_dst = [s for s in sel.star_sources[e.dst] if s in ok_dst]
             if new_src != sel.star_sources[e.src]:
                 sel.star_sources[e.src] = new_src
+                _prune_star_cs(sel.star_cs[e.src], new_src)
                 changed = True
             if new_dst != sel.star_sources[e.dst]:
                 sel.star_sources[e.dst] = new_dst
+                _prune_star_cs(sel.star_cs[e.dst], new_dst)
                 changed = True
+    # the final (no-change) sweep computed every edge's viable pairs against
+    # the fixpoint star_sources, so edge_pairs is consistent; filter anyway so
+    # the invariant holds even for degenerate single-pass exits
+    for ei, pairs in sel.edge_pairs.items():
+        e = graph.edges[ei]
+        keep_a = set(sel.star_sources[e.src])
+        keep_b = set(sel.star_sources[e.dst])
+        sel.edge_pairs[ei] = {(a, b) for (a, b) in pairs
+                              if a in keep_a and b in keep_b}
     return sel
+
+
+def _prune_star_cs(rel: dict[int, np.ndarray], keep: list[int]) -> None:
+    """Keep ``star_cs`` consistent with a pruned ``star_sources``: consumers
+    that read ``star_cs`` directly (federated-CS fallback entries included)
+    must not see CS sets for sources the CP fixpoint eliminated."""
+    keep_set = set(keep)
+    for s in [s for s in rel if s not in keep_set]:
+        del rel[s]

@@ -74,6 +74,12 @@ class EntitySummary:
             n += self.subj_counts.nbytes
         return int(n)
 
+    def retag(self, src: int) -> "EntitySummary":
+        """Renumber the source tag (statistics-lifecycle source removal);
+        signatures are position-independent and stay valid."""
+        self.src = src
+        return self
+
     def remove_entities(self, ents: np.ndarray, cs_idx: int, auth: int) -> None:
         """Update support: decrement bucket multiplicities; clear a bit only
         when its bucket count reaches zero (paper §3.3)."""

@@ -1,18 +1,25 @@
-"""Endpoint failover for the federated engine.
+"""Endpoint failover for the federated engine, on the versioned statistics
+lifecycle.
 
 A SPARQL federation loses endpoints routinely; the paper's engines time out.
-Here failures are first-class: ``execute_with_failover`` retries a failing
-dispatch (RetryPolicy), and if an endpoint stays dead it *re-plans* against
-the surviving federation — source selection runs again without the dead
-source, so the no-false-negative guarantee holds **relative to the live
-data** and the result is flagged partial (the honest contract; silently
-complete-looking results are the failure mode to avoid).
+Here failures are first-class and *cheap*: a ``FailoverSession`` owns one
+long-lived ``OdysseyOptimizer``.  Transient failures are retried without
+replanning (RetryPolicy); an endpoint that stays dead is excluded via
+``FederatedStats.remove_source`` — only the dead source's statistics are
+dropped (the survivors' CS/CP state and memoized formulas are reused, no
+rebuild) — and the epoch bump lazily evicts exactly the now-stale cached
+plans, so a templated workload re-warms the plan cache after the first
+replan instead of losing it.  Recovery is symmetric: ``restore`` re-adds a
+source incrementally (``add_source``).
+
+Source selection runs again without the dead source, so the
+no-false-negative guarantee holds **relative to the live data** and the
+result is flagged partial (the honest contract; silently complete-looking
+results are the failure mode to avoid).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-
-import numpy as np
 
 from repro.core.federation import FederatedStats
 from repro.core.planner import OdysseyOptimizer, PhysicalPlan
@@ -60,45 +67,111 @@ class FailoverResult:
     partial: bool                 # True => some endpoint was excluded
     excluded: list[str]
     replans: int = 0
+    cache_hit: bool = False       # plan served from the optimizer's plan cache
+    stats_epoch: int = 0          # statistics epoch the answer was planned under
+
+
+class FailoverSession:
+    """Long-lived failover executor: one optimizer, one live federation.
+
+    The session clones ``stats`` once (cheap: the clone shares the statistics
+    arrays) so endpoint exclusion never writes through to the caller's
+    statistics.  Across queries the plan cache and the untouched sources'
+    memoized formulas survive every exclusion — previously each dead endpoint
+    threw away the optimizer and rebuilt the whole federation's statistics.
+    """
+
+    def __init__(self, fed: Federation, stats: FederatedStats,
+                 retry: RetryPolicy | None = None, clone_stats: bool = True):
+        self.retry = retry or RetryPolicy(max_attempts=3, base_delay_s=0.001)
+        self.optimizer = OdysseyOptimizer(stats.clone() if clone_stats else stats)
+        self.fed = fed
+        self.excluded: list[str] = []
+        self._all_sources: dict[str, Source] = {s.name: s for s in fed.sources}
+        self._base_sources: list[Source] = list(fed.sources)
+
+    @property
+    def stats(self) -> FederatedStats:
+        return self.optimizer.stats
+
+    def execute(self, query: BGPQuery) -> FailoverResult:
+        replans = 0
+        while True:
+            plan = self.optimizer.optimize(query)
+            engine = FailoverEngine(self.fed)
+            try:
+                rows, metrics = self.retry.run(engine.execute, plan)
+                return FailoverResult(rows=rows, metrics=metrics,
+                                      partial=bool(self.excluded),
+                                      excluded=list(self.excluded),
+                                      replans=replans, cache_hit=plan.cached,
+                                      stats_epoch=self.stats.epoch)
+            except RuntimeError:
+                # a dead endpoint survived retries: exclude it and re-plan
+                sid = self._find_dead()
+                if sid is None:
+                    raise
+                self.exclude(sid)
+                replans += 1
+
+    def _find_dead(self) -> int | None:
+        for i, s in enumerate(self.fed.sources):
+            if isinstance(s, FlakySource) and s.dead:
+                return i
+        return None
+
+    def exclude(self, sid: int) -> str:
+        """Drop source ``sid`` from the live federation and its statistics.
+        Incremental: survivors keep their statistics and warm caches; the
+        epoch bump makes the plan cache lazily evict only stale plans."""
+        keep = self.fed.sources[:sid] + self.fed.sources[sid + 1:]
+        if not keep:
+            raise RuntimeError("every endpoint is dead")
+        name = self.fed.sources[sid].name
+        # mutate the statistics first: session bookkeeping (the `partial`
+        # contract reads `excluded`) must only record what actually happened
+        self.stats.remove_source(sid)
+        self.excluded.append(name)
+        self.fed = self._rebuild_fed(keep)
+        return name
+
+    def restore(self, name: str) -> int:
+        """Recovery: re-admit a previously excluded source.  Its statistics
+        (and the federated CPs incident to it) are rebuilt incrementally via
+        ``add_source``; everything else is reused.  Returns the new sid."""
+        if name not in self.excluded:
+            raise ValueError(f"source {name!r} is not excluded")
+        src = self._all_sources[name]
+        # add_source does real work (local stats + Algorithm 1 pairs) and may
+        # raise; only clear the exclusion once the source is really back,
+        # otherwise later results would look complete while it is absent
+        sid = self.stats.add_source(src.table)
+        self.excluded.remove(name)
+        self.fed = self._rebuild_fed(self.fed.sources + [src])
+        return sid
+
+    def _rebuild_fed(self, sources: list[Source]) -> Federation:
+        """Live federation over the (shared) Source objects.  Federation's
+        __post_init__ renumbers ``src.sid`` in place on those shared objects;
+        restore the caller's numbering afterwards — engines address sources
+        by list index, never by the sid field, so the session works either
+        way but the caller's original federation must stay intact."""
+        fed = Federation(sources, self.fed.dictionary)
+        for i, s in enumerate(self._base_sources):
+            s.sid = i
+        return fed
 
 
 def execute_with_failover(fed: Federation, stats: FederatedStats,
                           query: BGPQuery,
-                          retry: RetryPolicy | None = None) -> FailoverResult:
-    retry = retry or RetryPolicy(max_attempts=3, base_delay_s=0.001)
-    engine = FailoverEngine(fed)
-    excluded: list[str] = []
-    live = list(range(len(fed.sources)))
-    replans = 0
-
-    def attempt(current_fed: Federation, current_stats: FederatedStats):
-        opt = OdysseyOptimizer(current_stats)
-        plan = opt.optimize(query)
-        eng = FailoverEngine(current_fed)
-        return eng.execute(plan)
-
-    cur_fed, cur_stats = fed, stats
-    while True:
-        try:
-            rows, metrics = retry.run(attempt, cur_fed, cur_stats)
-            return FailoverResult(rows=rows, metrics=metrics,
-                                  partial=bool(excluded), excluded=excluded,
-                                  replans=replans)
-        except RuntimeError as exc:
-            # a dead endpoint survived retries: exclude it and re-plan
-            dead_name = None
-            for s in cur_fed.sources:
-                if isinstance(s, FlakySource) and s.dead:
-                    dead_name = s.name
-                    break
-            if dead_name is None:
-                raise
-            excluded.append(dead_name)
-            replans += 1
-            keep = [s for s in cur_fed.sources if s.name != dead_name]
-            if not keep:
-                raise
-            cur_fed = Federation(keep, cur_fed.dictionary)
-            from repro.core.federation import build_federated_stats
-
-            cur_stats = build_federated_stats(cur_fed, use_summaries=False)
+                          retry: RetryPolicy | None = None,
+                          session: FailoverSession | None = None) -> FailoverResult:
+    """One-shot convenience wrapper around ``FailoverSession``.  Pass a
+    ``session`` to amortize the optimizer, plan cache and statistics across a
+    workload (templated queries then hit the plan cache even after a replan)."""
+    if session is None:
+        session = FailoverSession(fed, stats, retry=retry)
+    elif retry is not None:
+        raise ValueError("pass the retry policy to the FailoverSession, not "
+                         "alongside it (a session owns its retry policy)")
+    return session.execute(query)

@@ -147,6 +147,11 @@ class ServeEngine:
         req.t_done = time.perf_counter()
         self.finished.append(req)
         del self.active[slot]
+        # reset the slot's position: `step` passes the whole `pos` vector to
+        # decode_step, so a freed slot with a stale pos (up to ctx-1) would
+        # scatter its dummy token into freed cache lines instead of holding
+        # the stated "idle slots write at their own position 0" invariant
+        self.pos[slot] = 0
 
     def run_until_done(self, max_steps: int = 10_000) -> list[Request]:
         steps = 0

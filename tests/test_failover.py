@@ -1,11 +1,14 @@
 """Endpoint failure handling: transparent retry on transient failures;
-re-plan + honest partial flag when an endpoint stays dead."""
+re-plan + honest partial flag when an endpoint stays dead.  With the
+versioned statistics lifecycle, exclusion is incremental (remove_source) and
+the plan cache survives a replan — templated workloads hit it afterwards —
+and recovery (restore/add_source) is expressible."""
 import numpy as np
 import pytest
 
 from repro.core.federation import build_federated_stats
 from repro.engine.local import naive_evaluate
-from repro.ft.failover import FlakySource, execute_with_failover
+from repro.ft.failover import FailoverSession, FlakySource, execute_with_failover
 from repro.ft.resilience import RetryPolicy
 from repro.rdf.dataset import Federation
 
@@ -45,3 +48,73 @@ def test_dead_endpoint_replans_and_flags_partial(small_fed, small_stats, workloa
             assert res.excluded == ["DBpedia"]
             assert res.replans >= 1
     assert hit > 0, "no query touched the dead endpoint?"
+
+
+def test_failover_session_plan_cache_survives_replan(small_fed, small_stats, workload):
+    """A shared session keeps its optimizer across queries: after the first
+    replan excludes the dead endpoint, repeats of a template are plan-cache
+    hits — previously impossible (each exclusion rebuilt all statistics and
+    threw the optimizer away)."""
+    fed, _ = small_fed
+    srcs = [FlakySource(s, dead=(s.name == "DBpedia")) for s in fed.sources]
+    flaky = Federation(srcs, fed.dictionary)
+    survivors = Federation([s for s in fed.sources if s.name != "DBpedia"],
+                           fed.dictionary)
+    session = FailoverSession(flaky, small_stats)
+    first = [session.execute(q) for q in workload]
+    kill = next((i for i, r in enumerate(first) if r.replans >= 1), None)
+    assert kill is not None, "no query touched the dead endpoint?"
+    # once excluded, every later answer is honestly partial
+    assert all(r.partial and r.excluded == ["DBpedia"] for r in first[kill:])
+    epoch = session.stats.epoch
+    assert epoch >= 1
+    # templated repetition: same structure => plan-cache hit, zero replans.
+    # Queries planned *before* the exclusion are epoch-stale: lazily evicted
+    # and replanned exactly once, then they hit too (third pass).
+    second = [session.execute(q) for q in workload]
+    assert all(r.cache_hit and r.replans == 0 for r in second[kill:])
+    assert all(not r.cache_hit for r in second[:kill])
+    assert all(r.stats_epoch == epoch for r in second)
+    third = [session.execute(q) for q in workload]
+    assert all(r.cache_hit and r.replans == 0 for r in third)
+    # the caller's federation must come through untouched: rebuilding the
+    # live Federation must not renumber the shared Source objects' sids
+    assert [s.sid for s in flaky.sources] == list(range(len(flaky.sources)))
+    for q, r1, r2 in zip(workload[kill:], first[kill:], second[kill:]):
+        want = naive_evaluate(survivors, q)
+        proj = q.effective_projection()
+        assert _result_set(r1.rows, proj) == want
+        assert _result_set(r2.rows, proj) == want
+
+
+def test_failover_session_restore_recovers_completeness(small_fed, small_stats, workload):
+    """Recovery: after the endpoint comes back, restore() re-admits it via
+    add_source and results are complete again (partial flag clears)."""
+    fed, _ = small_fed
+    srcs = [FlakySource(s, dead=(s.name == "DBpedia")) for s in fed.sources]
+    flaky = Federation(srcs, fed.dictionary)
+    session = FailoverSession(flaky, small_stats)
+    q = next(q for q in workload
+             if len(naive_evaluate(fed, q)) !=
+             len(naive_evaluate(Federation([s for s in fed.sources
+                                            if s.name != "DBpedia"],
+                                           fed.dictionary), q)))
+    res = session.execute(q)
+    assert res.partial and res.excluded == ["DBpedia"]
+    # the endpoint comes back
+    next(s for s in srcs if s.name == "DBpedia").dead = False
+    epoch = session.stats.epoch
+    sid = session.restore("DBpedia")
+    assert sid == len(session.fed.sources) - 1
+    assert session.stats.epoch == epoch + 1
+    res2 = session.execute(q)
+    assert not res2.partial and not res2.excluded
+    assert not res2.cache_hit                  # pre-restore plan is stale
+    assert _result_set(res2.rows, q.effective_projection()) == naive_evaluate(fed, q)
+    # incremental add_source == from-scratch rebuild of the restored order
+    from test_stats_lifecycle import assert_stats_equal
+    from repro.rdf.dataset import Source
+    order = [s.name for s in session.fed.sources]
+    rebuilt = build_federated_stats(Federation(
+        [Source(n, fed.by_name(n).table) for n in order], fed.dictionary))
+    assert_stats_equal(session.stats, rebuilt)

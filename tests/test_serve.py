@@ -102,6 +102,25 @@ def test_serve_slot_reuse(small_lm):
     assert all(len(r.out) == 3 for r in done)
 
 
+def test_serve_retired_slot_resets_pos(small_lm):
+    """Regression: `step` claims idle slots "write harmlessly at their own
+    position 0", but _retire used to leave the freed slot's stale pos (up to
+    ctx-1) in the vector passed to decode_step, scattering the dummy token
+    into freed cache lines.  Retirement must restore the invariant."""
+    cfg, params = small_lm
+    eng = ServeEngine(cfg, params, n_slots=2, ctx_len=64)
+    eng.submit(Request(rid=0, prompt=[5, 9, 23], max_new=4))
+    eng.submit(Request(rid=1, prompt=[7, 2], max_new=12))
+    while eng.queue or eng.active:
+        eng.step()
+        for slot in range(eng.n_slots):
+            if slot not in eng.active:
+                assert int(eng.pos[slot]) == 0, \
+                    f"idle slot {slot} holds stale pos {int(eng.pos[slot])}"
+    assert len(eng.finished) == 2
+    assert (eng.pos == 0).all()
+
+
 def test_serve_rejects_prompt_longer_than_ctx(small_lm):
     """Regression: a prompt >= ctx_len used to be admitted and run `pos` off
     the slot cache grid; it must be rejected at submit."""

@@ -1,0 +1,292 @@
+"""Versioned statistics lifecycle: incremental per-source mutators are
+bit-identical to a from-scratch rebuild, every mutation bumps the epoch, the
+plan cache never serves a pre-mutation plan, and the selection/graph state a
+cached plan hands out is detached from the cache."""
+import numpy as np
+import pytest
+
+from repro.core.decomposition import decompose
+from repro.core.federation import build_federated_stats
+from repro.core.planner import OdysseyOptimizer
+from repro.core.source_selection import select_sources
+from repro.rdf.dataset import Federation, Source, TripleTable
+
+
+def _refed(fed, keep=None, tables=None):
+    """Federation over fresh Source wrappers (never renumber a fixture's
+    shared Source objects in place)."""
+    sources = fed.sources if keep is None else [fed.sources[i] for i in keep]
+    out = []
+    for s in sources:
+        table = s.table if tables is None else tables.get(s.name, s.table)
+        out.append(Source(s.name, table))
+    return Federation(out, fed.dictionary)
+
+
+def _arrays_equal(a, b, fields):
+    for f in fields:
+        x, y = getattr(a, f), getattr(b, f)
+        if x is None or y is None:
+            assert x is None and y is None, f
+        else:
+            np.testing.assert_array_equal(x, y, err_msg=f)
+
+
+def assert_stats_equal(got, want):
+    """Bit-identity of every CS/CP statistic, export, summary and pruning
+    counter between two FederatedStats."""
+    assert got.n_sources == want.n_sources
+    for g, w in zip(got.cs, want.cs):
+        _arrays_equal(g, w, ("cs_count", "indptr", "pred_ids", "pred_occ",
+                             "ent_ids", "ent_cs"))
+    for g, w in zip(got.intra_cp, want.intra_cp):
+        assert (g.src1, g.src2) == (w.src1, w.src2)
+        _arrays_equal(g, w, ("pred", "cs1", "cs2", "count"))
+    assert set(got.fed_cp) == set(want.fed_cp)
+    for k in want.fed_cp:
+        g, w = got.fed_cp[k], want.fed_cp[k]
+        assert (g.src1, g.src2) == (w.src1, w.src2) == k
+        _arrays_equal(g, w, ("pred", "cs1", "cs2", "count"))
+    assert got.fed_cs == want.fed_cs
+    for g, w in zip(got.exports, want.exports):
+        assert g.src == w.src and g.n_cs == w.n_cs
+        _arrays_equal(g, w, ("subj_indptr", "subj_ents", "obj_cs", "obj_pred",
+                             "obj_indptr", "obj_ents", "obj_mult"))
+    assert len(got.summaries) == len(want.summaries)
+    for g, w in zip(got.summaries, want.summaries):
+        assert g.src == w.src and g.n_bits == w.n_bits
+        _arrays_equal(g, w, ("subj_auth", "subj_cs", "subj_sig", "obj_auth",
+                             "obj_cs", "obj_pred", "obj_sig", "subj_counts"))
+    assert got.pruning_checked == want.pruning_checked
+    assert got.pruning_possible == want.pruning_possible
+
+
+def _plan_shape(node):
+    from repro.core.planner import JoinPlanNode, SubqueryNode
+
+    if isinstance(node, SubqueryNode):
+        return ("sq", tuple(node.stars), tuple(node.sources),
+                tuple((tp.s, tp.p, tp.o) for tp in node.patterns))
+    assert isinstance(node, JoinPlanNode)
+    return ("join", node.strategy, tuple(node.join_vars),
+            _plan_shape(node.left), _plan_shape(node.right))
+
+
+# --------------------------------------------------------------------------
+# Differential: incremental mutators == from-scratch rebuild
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sid", [0, 4, 8])
+def test_remove_source_matches_rebuild(tiny_fed, tiny_stats, sid):
+    fed, _ = tiny_fed
+    keep = [i for i in range(len(fed.sources)) if i != sid]
+    got = tiny_stats.clone()
+    epoch0 = got.epoch
+    got.remove_source(sid)
+    assert got.epoch == epoch0 + 1
+    want = build_federated_stats(_refed(fed, keep))
+    assert_stats_equal(got, want)
+
+
+def test_add_source_matches_rebuild(tiny_fed, tiny_stats):
+    fed, _ = tiny_fed
+    sub = build_federated_stats(_refed(fed, keep=list(range(len(fed.sources) - 1))))
+    epoch0 = sub.epoch
+    sid = sub.add_source(fed.sources[-1].table)
+    assert sid == len(fed.sources) - 1
+    assert sub.epoch == epoch0 + 1
+    # the full build (== the session fixture) is the oracle
+    assert_stats_equal(sub, tiny_stats)
+
+
+def test_remove_then_add_roundtrip(tiny_fed, tiny_stats):
+    fed, _ = tiny_fed
+    got = tiny_stats.clone()
+    got.remove_source(len(fed.sources) - 1)   # last source: no renumbering
+    got.add_source(fed.sources[-1].table)
+    assert got.epoch == tiny_stats.epoch + 2
+    assert_stats_equal(got, tiny_stats)
+
+
+def _shrunk(table: TripleTable) -> TripleTable:
+    keep = np.ones(len(table.s), bool)
+    keep[::3] = False                          # drop every third triple
+    return TripleTable.from_triples(table.s[keep], table.p[keep], table.o[keep])
+
+
+def test_refresh_source_matches_rebuild(tiny_fed, tiny_stats):
+    fed, _ = tiny_fed
+    sid = 3
+    new_table = _shrunk(fed.sources[sid].table)
+    got = tiny_stats.clone()
+    got.refresh_source(sid, new_table)
+    assert got.epoch == tiny_stats.epoch + 1
+    want = build_federated_stats(
+        _refed(fed, tables={fed.sources[sid].name: new_table}))
+    assert_stats_equal(got, want)
+
+
+def test_refresh_source_identity_is_noop_but_bumps_epoch(tiny_fed, tiny_stats):
+    fed, _ = tiny_fed
+    got = tiny_stats.clone()
+    got.refresh_source(2, fed.sources[2].table)
+    assert got.epoch == tiny_stats.epoch + 1
+    assert_stats_equal(got, tiny_stats)
+
+
+def test_clone_isolates_mutation(tiny_fed, tiny_stats):
+    base = tiny_stats.clone()
+    fork = base.clone()
+    fork.remove_source(0)
+    assert base.n_sources == tiny_stats.n_sources
+    assert base.epoch == tiny_stats.epoch
+    assert_stats_equal(base, tiny_stats)       # src tags/keys untouched
+
+
+def test_invalidate_caches_clears_memos_and_bumps_epoch(tiny_stats, tiny_workload):
+    stats = tiny_stats.clone()
+    opt = OdysseyOptimizer(stats)
+    q = tiny_workload[0]
+    opt.optimize(q)                            # warms formula memos
+    assert any(c._card_cache for c in stats.cs) or \
+        any(c._card_cache for c in stats.intra_cp)
+    epoch = stats.epoch
+    stats.invalidate_caches()
+    assert stats.epoch == epoch + 1
+    assert all(not c._card_cache and not c._pred_index for c in stats.cs)
+    assert all(not c._card_cache for c in stats.intra_cp)
+    assert all(not c._card_cache for c in stats.fed_cp.values())
+    assert not opt.optimize(q).cached          # epoch bump => stale plan
+
+
+def test_lifecycle_requires_dictionary():
+    from repro.core.characteristic_pairs import CPStats
+    from repro.core.characteristic_sets import compute_characteristic_sets
+    from repro.core.federation import FederatedStats
+
+    t = TripleTable.from_triples(np.array([1, 1]), np.array([2, 3]), np.array([4, 5]))
+    e = np.zeros(0, np.int32)
+
+    def mk():
+        return FederatedStats(cs=[compute_characteristic_sets(t)],
+                              intra_cp=[CPStats(e, e.copy(), e.copy(),
+                                                np.zeros(0, np.int64))])
+
+    # add/refresh rebuild local stats from the dictionary => must refuse
+    with pytest.raises(ValueError, match="lifecycle"):
+        mk().add_source(t)
+    with pytest.raises(ValueError, match="lifecycle"):
+        mk().refresh_source(0, t)
+    # removal is pure bookkeeping: works on directly-constructed stats too
+    stats = mk()
+    stats.remove_source(0)
+    assert stats.n_sources == 0 and stats.epoch == 1
+
+
+# --------------------------------------------------------------------------
+# Epoch-keyed plan cache
+# --------------------------------------------------------------------------
+
+def test_cached_plan_not_served_across_refresh(tiny_fed, tiny_stats, tiny_workload):
+    fed, _ = tiny_fed
+    stats = tiny_stats.clone()
+    opt = OdysseyOptimizer(stats)
+    q = next(q for q in tiny_workload if len(q.patterns) >= 2)
+    p1 = opt.optimize(q)
+    assert opt.optimize(q).cached
+    stats.refresh_source(1, fed.sources[1].table)
+    p3 = opt.optimize(q)
+    assert not p3.cached                       # epoch bump => lazy miss
+    assert opt.plan_cache.stale_evictions >= 1
+    assert _plan_shape(p3.root) == _plan_shape(p1.root)  # identity refresh
+    assert opt.optimize(q).cached              # re-warmed under the new epoch
+
+
+def test_cached_plan_not_served_across_remove(tiny_fed, tiny_stats, tiny_workload):
+    fed, _ = tiny_fed
+    stats = tiny_stats.clone()
+    opt = OdysseyOptimizer(stats)
+    plans = [opt.optimize(q) for q in tiny_workload]
+    assert all(not p.cached for p in plans[:1])
+    sid = len(fed.sources) - 1
+    stats.remove_source(sid)
+    # every replan equals a from-scratch optimizer over the rebuilt stats
+    want = OdysseyOptimizer(build_federated_stats(
+        _refed(fed, keep=list(range(sid)))))
+    for q in tiny_workload:
+        p = opt.optimize(q)
+        assert not p.cached
+        assert _plan_shape(p.root) == _plan_shape(want.optimize(q).root)
+    # and the cache serves them again under the new epoch
+    assert all(opt.optimize(q).cached for q in tiny_workload)
+
+
+def test_epoch_zero_stats_unaffected(tiny_stats, tiny_workload):
+    """Legacy behavior: without mutations the epoch never moves and hits flow."""
+    opt = OdysseyOptimizer(tiny_stats)
+    q = tiny_workload[0]
+    opt.optimize(q)
+    assert opt.optimize(q).cached
+    assert opt.plan_cache.stale_evictions == 0
+
+
+# --------------------------------------------------------------------------
+# Regression: cached plans must not share selection/graph with callers
+# --------------------------------------------------------------------------
+
+def test_cache_hit_isolated_from_selection_mutation(tiny_stats, tiny_workload):
+    opt = OdysseyOptimizer(tiny_stats)
+    q = next(q for q in tiny_workload if len(q.patterns) >= 2)
+    p1 = opt.optimize(q)
+    want_sources = [list(s) for s in p1.selection.star_sources]
+    # failover-style source exclusion mutates the selection in place
+    for lst in p1.selection.star_sources:
+        lst.clear()
+    for d in p1.selection.star_cs:
+        d.clear()
+    p1.selection.edge_pairs.clear()
+    p1.graph.stars.clear()
+    p2 = opt.optimize(q)
+    assert p2.cached
+    assert [list(s) for s in p2.selection.star_sources] == want_sources
+    assert len(p2.graph.stars) == len(want_sources)
+    # a hit's mutation must not leak into later hits either
+    p2.selection.star_sources[0].append(999)
+    p3 = opt.optimize(q)
+    assert p3.cached
+    assert [list(s) for s in p3.selection.star_sources] == want_sources
+    # and each hit's per-query memo starts empty (documented lifetime)
+    assert p2.selection._memo is not p3.selection._memo
+    assert not p3.selection._memo
+
+
+def test_selection_memo_not_shared_across_hits(tiny_stats, tiny_workload):
+    opt = OdysseyOptimizer(tiny_stats)
+    q = tiny_workload[0]
+    opt.optimize(q)
+    p2 = opt.optimize(q)
+    p2.selection._memo["poison"] = -1.0
+    p3 = opt.optimize(q)
+    assert "poison" not in p3.selection._memo
+
+
+# --------------------------------------------------------------------------
+# Regression: select_sources keeps star_cs/edge_pairs consistent
+# --------------------------------------------------------------------------
+
+def test_star_cs_consistent_with_star_sources(tiny_stats, tiny_workload):
+    pruned_something = False
+    for q in tiny_workload:
+        graph = decompose(q)
+        sel = select_sources(graph, tiny_stats)
+        for si in range(len(graph.stars)):
+            assert set(sel.star_cs[si]) == set(sel.star_sources[si]), \
+                "star_cs retains sources the CP fixpoint eliminated"
+            if len(sel.star_cs[si]) < tiny_stats.n_sources:
+                pruned_something = True
+        for ei, pairs in sel.edge_pairs.items():
+            e = graph.edges[ei]
+            for a, b in pairs:
+                assert a in sel.star_sources[e.src]
+                assert b in sel.star_sources[e.dst]
+    assert pruned_something, "workload never exercised pruning?"
