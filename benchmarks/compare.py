@@ -1,0 +1,97 @@
+"""CI benchmark-regression gate: diff a fresh ``results/bench_quick.json``
+against the committed ``benchmarks/baseline_quick.json``.
+
+    PYTHONPATH=src python -m benchmarks.compare \
+        results/bench_quick.json benchmarks/baseline_quick.json [--tolerance 0.2]
+
+Every *guarded* metric in the baseline must be present in the current run
+and must not regress by more than ``tolerance`` (default 20%): for
+higher-is-better metrics (speedups, throughput multiples) the value must
+stay above ``baseline * (1 - tolerance)``; for lower-is-better metrics
+(peak RSS) below ``baseline * (1 + tolerance)``.  Guarded metrics are
+machine-portable ratios plus memory, so the gate is stable across runner
+generations while still catching real regressions.
+
+Exit status: 0 == within tolerance, 1 == regression (or missing metric),
+2 == usage/file error.  New metrics present only in the current run are
+reported informationally — commit a refreshed baseline to start guarding
+them.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        payload = json.load(f)
+    if "metrics" not in payload:
+        raise ValueError(f"{path}: no 'metrics' key (schema mismatch?)")
+    return payload["metrics"]
+
+
+def compare(current: dict, baseline: dict, tolerance: float) -> tuple[list[str], list[str]]:
+    """Returns ``(failures, notes)``."""
+    failures: list[str] = []
+    notes: list[str] = []
+    for name, base in sorted(baseline.items()):
+        base_v = float(base["value"])
+        higher = bool(base.get("higher_is_better", True))
+        cur = current.get(name)
+        if cur is None:
+            failures.append(f"FAIL {name}: guarded metric missing from current run")
+            continue
+        cur_v = float(cur["value"])
+        if higher:
+            floor = base_v * (1.0 - tolerance)
+            ok = cur_v >= floor
+            bound = f">= {floor:.3g}"
+        else:
+            ceil = base_v * (1.0 + tolerance)
+            ok = cur_v <= ceil
+            bound = f"<= {ceil:.3g}"
+        arrow = "higher" if higher else "lower"
+        line = (f"{name}: {cur_v:.3g} vs baseline {base_v:.3g} "
+                f"({arrow} is better, need {bound})")
+        if ok:
+            notes.append("OK   " + line)
+        else:
+            failures.append("FAIL " + line)
+    for name in sorted(set(current) - set(baseline)):
+        notes.append(f"NEW  {name}: {float(current[name]['value']):.3g} "
+                     "(not in baseline; refresh baseline_quick.json to guard it)")
+    return failures, notes
+
+
+def main(argv: "list[str] | None" = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="fresh bench_quick.json")
+    ap.add_argument("baseline", help="committed baseline_quick.json")
+    ap.add_argument("--tolerance", type=float, default=0.2,
+                    help="allowed fractional regression (default 0.2 == 20%%)")
+    args = ap.parse_args(argv)
+    try:
+        current = load(args.current)
+        baseline = load(args.baseline)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"benchmarks.compare: {e}", file=sys.stderr)
+        return 2
+    failures, notes = compare(current, baseline, args.tolerance)
+    for line in notes:
+        print(line)
+    for line in failures:
+        print(line)
+    if failures:
+        print(f"\nbenchmark regression gate: {len(failures)} metric(s) "
+              f"regressed beyond {args.tolerance:.0%} "
+              f"(baseline {args.baseline})", file=sys.stderr)
+        return 1
+    print(f"\nbenchmark regression gate: all {len(baseline)} guarded metrics "
+          f"within {args.tolerance:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

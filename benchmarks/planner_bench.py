@@ -26,6 +26,8 @@ from repro.core.source_selection import select_sources
 from repro.query.algebra import BGPQuery, Const, TriplePattern, Var
 
 STAR_COUNTS = (4, 6, 7, 8, 9)
+BATCH_SIZE = 64
+MIN_BATCH_SPEEDUP = 3.0     # batched vs sequential planning, cold plan cache
 
 
 def chain_query(stats, n_stars: int, k_extra: int, rng) -> BGPQuery:
@@ -86,6 +88,167 @@ def _median_ms(fn, reps: int) -> float:
     return float(np.median(ts)) * 1e3
 
 
+# -- batch scenario: template instantiation ----------------------------------
+
+def object_variants(q: BGPQuery, fed, k: int) -> list[BGPQuery]:
+    """``k`` instances of ``q`` differing only in a constant object bound to
+    a non-link pattern — the FedBench-style templated workload: same shape,
+    same pricing, distinct signatures."""
+    from repro.core.decomposition import decompose
+
+    g = decompose(q)
+    structural = {e.var for e in g.edges if e.var}
+    structural |= {s.subject.name for s in g.stars if isinstance(s.subject, Var)}
+    structural |= set(q.projection)
+    for star in reversed(g.stars):
+        for tp in star.patterns:
+            if isinstance(tp.p, Const) and isinstance(tp.o, Var) \
+                    and tp.o.name not in structural \
+                    and not any(e.pattern is tp for e in g.edges):
+                objs = sorted({int(o) for src in fed.sources
+                               for o in np.unique(src.table.o[src.table.p == tp.p.tid])})
+                if len(objs) >= 2:
+                    return [BGPQuery([TriplePattern(p.s, p.p,
+                                                    Const(objs[j % len(objs)])
+                                                    if p is tp else p.o)
+                                      for p in q.patterns], distinct=q.distinct,
+                                     projection=q.projection,
+                                     name=f"{q.name}o{j}")
+                            for j in range(k)]
+    return []
+
+
+def subject_variants(q: BGPQuery, fed, k: int) -> list[BGPQuery]:
+    """``k`` instances of ``q`` with the first star's subject bound to
+    different entities: same shape, but distinct selections and estimates —
+    these become real stacked members of the shape's DP sweep."""
+    from repro.core.decomposition import decompose
+
+    g = decompose(q)
+    star = g.stars[0]
+    if not isinstance(star.subject, Var):
+        return []
+    name = star.subject.name
+    if any(isinstance(tp.o, Var) and tp.o.name == name
+           for st in g.stars for tp in st.patterns):
+        return []
+    proj = [v for v in q.projection if v != name] or \
+        [v for s in g.stars[1:] if isinstance(s.subject, Var)
+         for v in (s.subject.name,)][:1]
+    if not proj:
+        return []
+    preds = set(star.bound_preds())
+    out: list[BGPQuery] = []
+    seen: set[int] = set()
+    for src in fed.sources:
+        t = src.table
+        for sid in np.unique(t.s):
+            sid = int(sid)
+            if sid not in seen and preds <= set(t.p[t.s == sid].tolist()):
+                seen.add(sid)
+                pats = [TriplePattern(Const(sid) if isinstance(p.s, Var)
+                                      and p.s.name == name else p.s, p.p, p.o)
+                        for p in q.patterns]
+                out.append(BGPQuery(pats, distinct=q.distinct, projection=proj,
+                                    name=f"{q.name}s{sid}"))
+                if len(out) >= k:
+                    return out
+    return out
+
+
+def batch_workload(stats, fed, size: int = BATCH_SIZE) -> list[BGPQuery]:
+    """A mixed-shape, cold-cache planning batch: several star counts, object-
+    constant template instances, subject-constant instances (distinct
+    selections within a shape) and some exact duplicates."""
+    q3 = planner_query(stats, 3, seed=101, k_extra=3)
+    q4 = planner_query(stats, 4, seed=202, k_extra=3)
+    q5 = planner_query(stats, 5, seed=303, k_extra=3)
+    q6 = planner_query(stats, 6, seed=404, k_extra=3)
+    base: list[BGPQuery] = []
+    base += object_variants(q4, fed, 16)
+    base += subject_variants(q5, fed, 12)
+    base += object_variants(q6, fed, 12)
+    base += [q3] * 8
+    base += [q3, q4, q5, q6]
+    batch = list(base)
+    while len(batch) < size:
+        batch.append(base[len(batch) % len(base)])
+    return batch[:size]
+
+
+def run_batch(scale: float = 1.0, size: int = BATCH_SIZE, reps: int = 5,
+              assert_speedup: bool = False):
+    """The truly-batched planning scenario: a ``size``-query mixed-shape
+    batch planned cold (plan cache off on both sides, statistics memos warm
+    as in steady-state serving) — ``optimize_batch`` vs the sequential
+    ``optimize`` loop.  Verifies per-query plan equality, reports the
+    throughput multiple, and (under ``assert_speedup``, the CI smoke) fails
+    hard below ``MIN_BATCH_SPEEDUP``."""
+    fed, gt, stats, _ = fixture(scale)
+    batch = batch_workload(stats, fed, size)
+
+    # steady-state: formula-level memos warm for both sides, plan caches off
+    OdysseyOptimizer(stats, plan_cache_size=0).optimize_batch(batch)
+
+    def loop():
+        opt = OdysseyOptimizer(stats, plan_cache_size=0)
+        return [opt.optimize(q) for q in batch]
+
+    rep_holder = {}
+
+    def batched():
+        opt = OdysseyOptimizer(stats, plan_cache_size=0)
+        plans = opt.optimize_batch(batch)
+        rep_holder["report"] = opt.last_batch_report
+        return plans
+
+    plans_l, plans_b = loop(), batched()
+    for q, a, b in zip(batch, plans_l, plans_b):
+        assert _plan_equal(a, b), f"batched plan differs from loop: {q.name}"
+
+    loop_ms = _median_ms(loop, reps)
+    batch_ms = _median_ms(batched, reps)
+    speedup = loop_ms / max(batch_ms, 1e-9)
+    r = rep_holder["report"]
+    text = "\n".join([
+        "== Batched planning (optimize_batch vs sequential loop, cold cache) ==",
+        f"batch {len(batch)} queries: {r.n_shapes} shapes, {r.n_priced} priced "
+        f"DP members, {r.n_selections} selection fixpoints, "
+        f"{r.duplicates} duplicates",
+        f"sequential loop : {loop_ms:9.2f} ms  ({loop_ms / len(batch):.3f} ms/query)",
+        f"optimize_batch  : {batch_ms:9.2f} ms  ({batch_ms / len(batch):.3f} ms/query)",
+        f"planning throughput: {speedup:.1f}x (target >= {MIN_BATCH_SPEEDUP}x)",
+    ])
+    csv = [
+        (f"planner/batch{len(batch)}_loop_us", loop_ms * 1e3 / len(batch),
+         f"{loop_ms:.1f}ms_total"),
+        (f"planner/batch{len(batch)}_batched_us", batch_ms * 1e3 / len(batch),
+         f"{speedup:.1f}x_vs_loop"),
+    ]
+    metrics = {"batch_throughput_x": speedup}
+    if assert_speedup and speedup < MIN_BATCH_SPEEDUP:
+        raise SystemExit(
+            f"batched planning regression: optimize_batch is only "
+            f"{speedup:.1f}x the sequential loop at batch {len(batch)} "
+            f"(need >= {MIN_BATCH_SPEEDUP}x)\n{text}")
+    return csv, text, metrics
+
+
+def _plan_equal(a, b) -> bool:
+    from repro.core.planner import JoinPlanNode, SubqueryNode
+
+    def shape(n):
+        if isinstance(n, SubqueryNode):
+            return ("sq", tuple(n.stars), tuple(n.sources), n.est_cardinality,
+                    tuple((tp.s, tp.p, tp.o) for tp in n.patterns))
+        assert isinstance(n, JoinPlanNode)
+        return ("join", n.strategy, tuple(n.join_vars), n.est_cardinality,
+                shape(n.left), shape(n.right))
+
+    return shape(a.root) == shape(b.root) and \
+        a.selection.star_sources == b.selection.star_sources
+
+
 def run(scale: float = 1.0, reps: int = 9, seeds_per_size: int = 2):
     fed, gt, stats, _ = fixture(scale)
     cm = CostModel()
@@ -127,13 +290,16 @@ def run(scale: float = 1.0, reps: int = 9, seeds_per_size: int = 2):
                         f"{speedup:.1f}x_vs_ref"))
             csv.append((f"planner/plan_cache_hit_{n}star_{si}", hit_ms * 1e3,
                         f"{cache_x:.0f}x_vs_ref"))
+    metrics = {}
     if speedups_6plus:
+        metrics = {"planner_geomean_speedup_x": geomean(speedups_6plus),
+                   "planner_cache_hit_x": geomean(cache_ratios)}
         lines.append(f"geomean speedup (>=6 stars): {geomean(speedups_6plus):.1f}x "
                      f"(target >=5x); cached re-plan {geomean(cache_ratios):.0f}x "
                      f"(target >=50x)")
     else:
         lines.append("no >=6-star queries survived source selection at this scale")
-    return csv, "\n".join(lines)
+    return csv, "\n".join(lines), metrics
 
 
 def run_large(quick: bool = False, reps: int = 3):
@@ -192,8 +358,9 @@ def run_large(quick: bool = False, reps: int = 3):
 if __name__ == "__main__":
     import sys
 
-    csv, text = run(scale=0.25)
+    csv, text, _ = run(scale=0.25)
+    csv_b, text_b, _ = run_batch(scale=0.25, assert_speedup=True)
     csv_l, text_l = run_large(quick=True)
-    print(text + "\n\n" + text_l, file=sys.stderr)
-    for name, us, derived in csv + csv_l:
+    print(text + "\n\n" + text_b + "\n\n" + text_l, file=sys.stderr)
+    for name, us, derived in csv + csv_b + csv_l:
         print(f"{name},{us:.3f},{derived}")

@@ -4,12 +4,38 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (stdout) and human-readable
 tables (stderr + results/benchmarks.txt).
+
+``--quick`` is the CI smoke: besides the hard in-bench assertions (batched
+planning >= 3x the sequential loop, incremental statistics lifecycle >= 3x
+the rebuild) it writes the guarded metrics — geomean planner speedups, batch
+planning throughput, statistics-lifecycle speedups, peak RSS — to
+``results/bench_quick.json`` for ``benchmarks.compare`` to diff against the
+committed ``benchmarks/baseline_quick.json`` (the CI benchmark-regression
+gate).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
+import resource
 import sys
+
+
+def _peak_rss_mb() -> float:
+    ru = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    return ru / (2**20 if sys.platform == "darwin" else 1024)
+
+
+# guarded metrics: name -> direction (True == higher is better)
+HIGHER_IS_BETTER = {
+    "planner_geomean_speedup_x": True,
+    "planner_cache_hit_x": True,
+    "batch_throughput_x": True,
+    "stats_remove_speedup_x": True,
+    "stats_refresh_speedup_x": True,
+    "peak_rss_mb": False,
+}
 
 
 def main() -> None:
@@ -25,11 +51,14 @@ def main() -> None:
 
     csv_rows: list[tuple] = []
     tables: list[str] = []
+    metrics: dict[str, float] = {}
 
     def add(result):
-        csv, text = result
+        csv, text = result[0], result[1]
         csv_rows.extend(csv)
         tables.append(text)
+        if len(result) > 2 and result[2]:
+            metrics.update(result[2])
 
     add(F.table2_statistics(scale))
     add(F.cardinality_accuracy(scale))
@@ -45,17 +74,36 @@ def main() -> None:
     add(F.fig8_transferred_tuples(runs))
     add(F.fig9_hybrids(runs))
     add(planner_bench.run(scale))
+    # --quick (the CI smoke) asserts batched planning >= 3x the loop
+    add(planner_bench.run_batch(scale, assert_speedup=args.quick))
     add(planner_bench.run_large(quick=args.quick))
-    # --quick (the CI smoke) asserts incremental failover >= 3x full rebuild
+    # --quick also asserts incremental failover >= 3x full rebuild
     add(stats_refresh_bench.run(scale, assert_speedup=args.quick))
     add(kernel_bench.run())
     add(roofline_bench.run())
+    metrics["peak_rss_mb"] = _peak_rss_mb()
 
     text = "\n\n".join(tables)
     os.makedirs("results", exist_ok=True)
     with open("results/benchmarks.txt", "w") as f:
         f.write(text)
     print(text, file=sys.stderr)
+
+    if args.quick:
+        payload = {
+            "schema": 1,
+            "scale": scale,
+            "metrics": {
+                name: {"value": float(value),
+                       "higher_is_better": HIGHER_IS_BETTER.get(name, True)}
+                for name, value in sorted(metrics.items())
+            },
+        }
+        with open("results/bench_quick.json", "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote results/bench_quick.json ({len(metrics)} guarded metrics)",
+              file=sys.stderr)
 
     print("name,us_per_call,derived")
     for name, us, derived in csv_rows:

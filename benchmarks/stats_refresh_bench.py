@@ -98,11 +98,12 @@ def run(scale: float = 0.25, assert_speedup: bool = False, reps: int = 3):
         raise SystemExit(
             f"stats lifecycle regression: incremental remove_source+replan is "
             f"only {speedup:.1f}x the full rebuild (need >= {MIN_SPEEDUP}x)\n{text}")
-    return csv, text
+    return csv, text, {"stats_remove_speedup_x": speedup,
+                       "stats_refresh_speedup_x": refresh_speedup}
 
 
 def main() -> None:
-    csv, text = run(scale=0.25, assert_speedup=True)
+    csv, text, _ = run(scale=0.25, assert_speedup=True)
     print(text, file=sys.stderr)
     for name, us, derived in csv:
         print(f"{name},{us:.3f},{derived}")

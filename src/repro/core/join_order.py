@@ -25,7 +25,12 @@ Two DP implementations share the same plan space and cost model:
                        on the statistics objects, see
                        ``repro.core.cardinality``), so batches of related
                        queries amortize the statistics work.  This is the
-                       optimizer hot path.
+                       optimizer hot path.  ``dp_join_order_batch`` runs the
+                       same sweep once over a whole *shape group* — queries
+                       with identical ``star_graph_topology`` — stacking the
+                       per-layer candidate tensors along a member axis, and
+                       returns per-member trees bit-identical to planning
+                       each member alone.
 ``dp_join_order_ref``  the original frozenset/`itertools.combinations`
                        formulation with unmemoized statistics, kept as the
                        reference oracle — tests assert the bitmask DP returns
@@ -322,6 +327,42 @@ def _subset_cardinalities(graph: StarGraph, star_card: list[float],
     return card
 
 
+def star_graph_topology(graph: StarGraph) -> tuple:
+    """Structural identity of a star graph as the DP sees it: star count plus
+    the ordered edge list (endpoints, link predicate, generic flag).  Graphs
+    with equal topology share the DP's mask/connectivity/enumeration
+    structure and the edge-dedupe fold of ``_subset_cardinalities`` — only
+    the numeric inputs (star cardinalities, edge selectivities, per-star
+    source lists) differ, which is what ``dp_join_order_batch`` exploits."""
+    return (len(graph.stars),
+            tuple((e.src, e.dst, e.pred, e.generic) for e in graph.edges))
+
+
+def _subset_cardinalities_b(graph: StarGraph, star_card: np.ndarray,
+                            edge_sel: np.ndarray, masks: np.ndarray) -> np.ndarray:
+    """Member-batched ``_subset_cardinalities``: ``star_card``/``edge_sel``
+    are ``(B, n)`` / ``(B, n_edges)``; returns ``card`` of shape
+    ``(B, len(masks))``.  The fold order (member-ascending, then
+    edge-ascending with first-edge-wins dedupe) matches the single-member
+    form element for element, so row ``b`` is bit-identical to
+    ``_subset_cardinalities(graph, star_card[b], edge_sel[b], masks)``."""
+    n = len(graph.stars)
+    card = np.ones((star_card.shape[0], len(masks)))
+    for i in range(n):
+        member = ((masks >> i) & 1) == 1
+        card[:, member] *= star_card[:, i:i + 1]
+    seen: set[tuple[int, int, int | None]] = set()
+    for k, e in enumerate(graph.edges):
+        key = (min(e.src, e.dst), max(e.src, e.dst), e.pred)
+        if key in seen:
+            continue
+        seen.add(key)
+        em = (1 << e.src) | (1 << e.dst)
+        inside = (masks & em) == em
+        card[:, inside] *= edge_sel[:, k:k + 1]
+    return card
+
+
 def dp_join_order(
     graph: StarGraph,
     stats: FederatedStats,
@@ -352,19 +393,83 @@ def dp_join_order(
     explicit cross-edge test is implied), and only the surviving csg/cmp
     pairs are costed.  Per-tile segmented first-minimum plus strictly-less
     running updates across tiles reproduce the reference's first-strict-
-    minimum tie-breaking exactly, so both DPs return the same plan."""
+    minimum tie-breaking exactly, so both DPs return the same plan.
+
+    Implemented as the single-member case of ``_dp_sweep`` — the same sweep
+    ``dp_join_order_batch`` runs over a whole shape group at once."""
     cm = cost_model or CostModel()
-    n = len(graph.stars)
     star_card, edge_sel = _star_edge_statistics(graph, stats, sel, distinct)
+    return _dp_sweep(graph, [sel], [star_card], [edge_sel], cm, block_bytes)[0]
+
+
+def dp_join_order_batch(
+    graphs: "list[StarGraph]",
+    stats: FederatedStats,
+    sels: "list[SourceSelection]",
+    cost_model: CostModel | None = None,
+    distinct: bool = True,
+    block_bytes: int | None = None,
+) -> "list[JoinTree]":
+    """One DP sweep over a *shape group*: queries whose star graphs share
+    ``star_graph_topology`` (star count + ordered edge list).  The layer
+    structure — connected-subset enumeration, (A, B) partition tiles, the
+    connectivity filter, the segmented reduction layout — is computed once
+    for the whole group; only the numeric state (cardinalities, costs,
+    source counts/weights) carries a member axis, costed blockwise through
+    the broadcasting ``CostModel.*_v`` forms.  Per member the candidate
+    order, the float operations and the first-strict-minimum tie-breaking
+    are element-for-element those of ``dp_join_order``, so each returned
+    tree is bit-identical to planning that member alone.
+
+    Tile sizing divides the ``block_bytes`` budget by the member count, so a
+    group sweep obeys the same peak-memory bound as a single query."""
+    if not graphs:
+        return []
+    if len(graphs) != len(sels):
+        raise ValueError("one SourceSelection per graph")
+    topo = star_graph_topology(graphs[0])
+    for g in graphs[1:]:
+        if star_graph_topology(g) != topo:
+            raise ValueError("dp_join_order_batch needs topology-identical "
+                             "graphs (group by star_graph_topology first)")
+    cm = cost_model or CostModel()
+    star_cards: list[list[float]] = []
+    edge_sels: list[list[float]] = []
+    for g, sel in zip(graphs, sels):
+        sc, es = _star_edge_statistics(g, stats, sel, distinct)
+        star_cards.append(sc)
+        edge_sels.append(es)
+    return _dp_sweep(graphs[0], sels, star_cards, edge_sels, cm, block_bytes)
+
+
+def _dp_sweep(
+    graph: StarGraph,
+    sels: "list[SourceSelection]",
+    star_cards: "list[list[float]]",
+    edge_sels: "list[list[float]]",
+    cm: CostModel,
+    block_bytes: int | None = None,
+) -> "list[JoinTree]":
+    """The tiled csg/cmp sweep over ``B = len(sels)`` members sharing one
+    graph topology.  Mask enumeration, connectivity and tile layout are
+    member-independent; every numeric array carries a leading member axis."""
+    n = len(graph.stars)
+    B = len(sels)
     if n == 1:
-        ss = frozenset([0])
-        card0 = star_card[0]
-        return JoinTree("leaf", ss, card0, cm.leaf_cost(card0, sel.star_sources[0]),
-                        sources=list(sel.star_sources[0]))
+        out = []
+        for sel, sc in zip(sels, star_cards):
+            ss = frozenset([0])
+            out.append(JoinTree("leaf", ss, sc[0],
+                                cm.leaf_cost(sc[0], sel.star_sources[0]),
+                                sources=list(sel.star_sources[0])))
+        return out
 
     size = 1 << n
     masks = np.arange(size, dtype=np.int64)
-    card = _subset_cardinalities(graph, star_card, edge_sel, masks)
+    sc_b = np.asarray(star_cards, dtype=np.float64)        # (B, n)
+    es_b = (np.asarray(edge_sels, dtype=np.float64)
+            if graph.edges else np.zeros((B, 0)))
+    card = _subset_cardinalities_b(graph, sc_b, es_b, masks)
 
     # star neighborhoods (all edges, including generic/duplicate ones)
     adj = np.zeros(n, np.int64)
@@ -372,37 +477,41 @@ def dp_join_order(
         adj[e.src] |= np.int64(1) << e.dst
         adj[e.dst] |= np.int64(1) << e.src
 
-    # exclusive groups: stars pinned to exactly one source
-    single_src = np.full(n, -1, np.int64)
-    single_mask = np.int64(0)
-    for i, srcs in enumerate(sel.star_sources):
-        if len(srcs) == 1:
-            single_src[i] = srcs[0]
-            single_mask |= np.int64(1) << i
+    # exclusive groups: stars pinned to exactly one source (per member)
+    single_src = np.full((B, n), -1, np.int64)
+    single_mask = np.zeros(B, np.int64)
+    for b, sel in enumerate(sels):
+        for i, srcs in enumerate(sel.star_sources):
+            if len(srcs) == 1:
+                single_src[b, i] = srcs[0]
+                single_mask[b] |= np.int64(1) << i
 
-    # per-mask best-plan state (cost == inf encodes "no plan")
+    # per-(member, mask) best-plan state (cost == inf encodes "no plan")
     INF = np.inf
-    cost = np.full(size, INF)
-    conn = np.zeros(size, bool)
-    bindable = np.zeros(size, bool)         # leaf with >=1 source
-    n_src = np.zeros(size, np.int64)
-    src_w = np.ones(size)
+    cost = np.full((B, size), INF)
+    conn = np.zeros(size, bool)                  # member-independent
+    bindable = np.zeros((B, size), bool)         # leaf with >=1 source
+    n_src = np.zeros((B, size), np.int64)
+    src_w = np.ones((B, size))
     STRAT_SINGLE, STRAT_EXCL, STRAT_HASH, STRAT_BIND = 1, 2, 3, 4
-    strat = np.zeros(size, np.int8)
-    split = np.zeros(size, np.int64)
-    excl_of = np.full(size, -1, np.int64)
+    strat = np.zeros((B, size), np.int8)
+    split = np.zeros((B, size), np.int64)
+    excl_of = np.full((B, size), -1, np.int64)
 
     for i in range(n):
         m = 1 << i
-        srcs = sel.star_sources[i]
-        cost[m] = cm.leaf_cost(star_card[i], srcs)
         conn[m] = True
-        bindable[m] = len(srcs) > 0
-        n_src[m] = len(srcs)
-        src_w[m] = cm.src_w(srcs)
-        strat[m] = STRAT_SINGLE
+        for b, sel in enumerate(sels):
+            srcs = sel.star_sources[i]
+            cost[b, m] = cm.leaf_cost(star_cards[b][i], srcs)
+            bindable[b, m] = len(srcs) > 0
+            n_src[b, m] = len(srcs)
+            src_w[b, m] = cm.src_w(srcs)
+            strat[b, m] = STRAT_SINGLE
 
-    tile_elems = max(1, int(block_bytes or DP_BLOCK_BYTES) // _PAIR_BYTES)
+    # the tile budget covers the whole member-stacked candidate state, so a
+    # B-member sweep divides the per-tile pair count by B
+    tile_elems = max(1, int(block_bytes or DP_BLOCK_BYTES) // (_PAIR_BYTES * B))
     # small-star fast path: dense per-layer structures cached across calls,
     # taken whenever the whole dense layer set (< 3^n pairs) fits the budget
     skel = (_layer_skeletons(n)
@@ -412,6 +521,15 @@ def dp_join_order(
         for i in range(n):
             pop += (masks >> i) & 1
 
+    any_single = bool(single_mask.any())
+    # per-source weight lookup for the exclusive-group seed: one interpreted
+    # cm.src_w call per source id instead of one per (member, column) tile
+    # cell (index -1, "no single source", resolves to the appended 1.0 —
+    # cm.src_w([-1]) for an id absent from source_weight)
+    w_lut = None
+    if cm.source_weight:
+        hi = int(single_src.max()) + 1 if single_src.size else 0
+        w_lut = np.array([cm.src_w([s]) for s in range(hi)] + [1.0])
     for s in range(2, n + 1):
         # layer connectivity: S is connected iff some member i has a neighbor
         # in S and S \ {i} is connected (spanning-tree leaf argument)
@@ -434,17 +552,18 @@ def dp_join_order(
         if n_cols == 0:
             continue
 
-        card_S = card[cols]
+        card_S = card[:, cols]
         hj = cm.hash_join_cost_v(card_S)
 
-        # running per-subset best across tiles; strat 0 == no candidate yet.
-        # Seeded below with the exclusive-group leaf (candidate index 0 in
-        # the reference order), which pair candidates must beat strictly.
-        run_cost = np.full(n_cols, INF)
-        run_split = np.zeros(n_cols, np.int64)
-        run_strat = np.zeros(n_cols, np.int8)
-        excl_w = np.ones(n_cols)
-        excl_src = np.full(n_cols, -1, np.int64)
+        # running per-(member, subset) best across tiles; strat 0 == no
+        # candidate yet.  Seeded below with the exclusive-group leaf
+        # (candidate index 0 in the reference order), which pair candidates
+        # must beat strictly.
+        run_cost = np.full((B, n_cols), INF)
+        run_split = np.zeros((B, n_cols), np.int64)
+        run_strat = np.zeros((B, n_cols), np.int8)
+        excl_w = np.ones((B, n_cols))
+        excl_src = np.full((B, n_cols), -1, np.int64)
 
         rel = _rel_submasks(s)
         n_rows = len(rel)
@@ -467,26 +586,26 @@ def dp_join_order(
                 idx_b = np.nonzero(bitm)[1].reshape(len(Sb), s).astype(np.int64)
                 pow2_b = np.int64(1) << idx_b
 
-            if single_mask:
-                in_single = (Sb & ~single_mask) == 0
+            if any_single:
+                in_single = (Sb[None, :] & ~single_mask[:, None]) == 0
                 if in_single.any():
-                    srcs_mat = single_src[idx_b]
-                    excl_ok = in_single & (srcs_mat == srcs_mat[:, :1]).all(axis=1)
-                    excl_src[c0:c1] = srcs_mat[:, 0]
+                    srcs_mat = single_src[:, idx_b]        # (B, nb, s)
+                    excl_ok = in_single & (srcs_mat == srcs_mat[:, :, :1]).all(axis=2)
+                    excl_src[:, c0:c1] = srcs_mat[:, :, 0]
                     if excl_ok.any():
-                        w = excl_w[c0:c1]
-                        if cm.source_weight:
-                            w = np.array([cm.src_w([int(x)]) for x in srcs_mat[:, 0]])
-                            excl_w[c0:c1] = w
-                        run_cost[c0:c1] = np.where(
-                            excl_ok, cm.leaf_cost_v(card_S[c0:c1], 1, w), INF)
-                        run_strat[c0:c1] = np.where(excl_ok, STRAT_EXCL,
-                                                    0).astype(np.int8)
+                        w = excl_w[:, c0:c1]
+                        if w_lut is not None:
+                            w = w_lut[srcs_mat[:, :, 0]]
+                            excl_w[:, c0:c1] = w
+                        run_cost[:, c0:c1] = np.where(
+                            excl_ok, cm.leaf_cost_v(card_S[:, c0:c1], 1, w), INF)
+                        run_strat[:, c0:c1] = np.where(excl_ok, STRAT_EXCL,
+                                                       0).astype(np.int8)
 
             for r0 in range(0, n_rows, row_block):
                 if skel is not None:
                     A = A_all if all_conn else A_all[:, sub]
-                    B = B_all if all_conn else B_all[:, sub]
+                    Bm = B_all if all_conn else B_all[:, sub]
                 else:
                     relb = rel[r0:r0 + row_block]
                     # deposit the relative submasks into each column's bit
@@ -494,84 +613,94 @@ def dp_join_order(
                     A = np.zeros((len(relb), len(Sb)), np.int64)
                     for j in range(s):
                         A += ((relb >> j) & 1)[:, None] * pow2_b[:, j][None, :]
-                    B = Sb[None, :] ^ A
-                valid = conn[A] & conn[B]
+                    Bm = Sb[None, :] ^ A
+                valid = conn[A] & conn[Bm]
                 if not valid.any():
                     continue
                 ci, ri = np.nonzero(valid.T)   # col-major: rows asc per col
                 Af = A[ri, ci]
-                Bf = B[ri, ci]
-                del A, B, valid, ri            # dense tile state: off-peak
+                Bf = Bm[ri, ci]
+                del A, Bm, valid, ri           # dense tile state: off-peak
                                                # before the per-pair gathers
                 gci = c0 + ci
                 pair_c, is_bind = cm.join_candidates_v(
-                    cost[Af], cost[Bf], card_S[gci], hj[gci],
-                    card[Af], n_src[Bf], src_w[Bf], bindable[Bf])
+                    cost[:, Af], cost[:, Bf], card_S[:, gci], hj[:, gci],
+                    card[:, Af], n_src[:, Bf], src_w[:, Bf], bindable[:, Bf])
                 # ci is sorted; segment = run of equal column indices
                 change = np.empty(len(ci), bool)
                 change[0] = True
                 np.not_equal(ci[1:], ci[:-1], out=change[1:])
                 seg_starts = np.flatnonzero(change)
                 seg_cols = ci[seg_starts]
-                seg_min = np.minimum.reduceat(pair_c, seg_starts)
+                seg_min = np.minimum.reduceat(pair_c, seg_starts, axis=1)
                 seg_of = np.cumsum(change) - 1
                 # first candidate attaining the segment minimum == the
                 # reference's first-strict-minimum tie-breaking
-                flat = np.where(pair_c == seg_min[seg_of],
-                                np.arange(len(ci)), len(ci))
-                first = np.minimum.reduceat(flat, seg_starts)
+                flat = np.where(pair_c == seg_min[:, seg_of],
+                                np.arange(len(ci))[None, :], len(ci))
+                first = np.minimum.reduceat(flat, seg_starts, axis=1)
                 g = c0 + seg_cols
-                upd = seg_min < run_cost[g]
+                upd = seg_min < run_cost[:, g]
                 if upd.any():
-                    gu = g[upd]
-                    fu = first[upd]
-                    run_cost[gu] = seg_min[upd]
-                    run_split[gu] = Af[fu]
-                    run_strat[gu] = np.where(is_bind[fu], STRAT_BIND, STRAT_HASH)
+                    bu, su = np.nonzero(upd)
+                    gu = g[su]
+                    fu = first[bu, su]
+                    run_cost[bu, gu] = seg_min[bu, su]
+                    run_split[bu, gu] = Af[fu]
+                    run_strat[bu, gu] = np.where(is_bind[bu, fu],
+                                                 STRAT_BIND, STRAT_HASH)
 
         ok = run_strat != 0
         if not ok.any():
             continue
-        S_ok = cols[ok]
-        st_ok = run_strat[ok]
+        bo, ko = np.nonzero(ok)
+        S_ok = cols[ko]
+        st_ok = run_strat[bo, ko]
         is_excl = st_ok == STRAT_EXCL
-        cost[S_ok] = run_cost[ok]
-        strat[S_ok] = st_ok
-        split[S_ok] = np.where(is_excl, 0, run_split[ok])
-        bindable[S_ok] = is_excl
-        n_src[S_ok] = np.where(is_excl, 1, 0)
-        src_w[S_ok] = np.where(is_excl, excl_w[ok], 1.0)
-        excl_of[S_ok] = np.where(is_excl, excl_src[ok], -1)
+        cost[bo, S_ok] = run_cost[bo, ko]
+        strat[bo, S_ok] = st_ok
+        split[bo, S_ok] = np.where(is_excl, 0, run_split[bo, ko])
+        bindable[bo, S_ok] = is_excl
+        n_src[bo, S_ok] = np.where(is_excl, 1, 0)
+        src_w[bo, S_ok] = np.where(is_excl, excl_w[bo, ko], 1.0)
+        excl_of[bo, S_ok] = np.where(is_excl, excl_src[bo, ko], -1)
 
-    def build(m: int) -> JoinTree:
+    def build(b: int, m: int) -> JoinTree:
         ss = frozenset(i for i in range(n) if (m >> i) & 1)
-        st = int(strat[m])
+        st = int(strat[b, m])
         if st == STRAT_SINGLE:
             i = next(iter(ss))
-            return JoinTree("leaf", ss, star_card[i], float(cost[m]),
-                            sources=list(sel.star_sources[i]))
+            return JoinTree("leaf", ss, star_cards[b][i], float(cost[b, m]),
+                            sources=list(sels[b].star_sources[i]))
         if st == STRAT_EXCL:
-            return JoinTree("leaf", ss, float(card[m]), float(cost[m]),
-                            sources=[int(excl_of[m])])
-        am = int(split[m])
-        return JoinTree("join", ss, float(card[m]), float(cost[m]),
-                        build(am), build(m ^ am),
+            return JoinTree("leaf", ss, float(card[b, m]), float(cost[b, m]),
+                            sources=[int(excl_of[b, m])])
+        am = int(split[b, m])
+        return JoinTree("join", ss, float(card[b, m]), float(cost[b, m]),
+                        build(b, am), build(b, m ^ am),
                         "hash" if st == STRAT_HASH else "bind")
 
     full = size - 1
-    if np.isfinite(cost[full]):
-        return build(full)
-    # disconnected query: cartesian-combine components by ascending cardinality
-    comps = _components(graph)
-    trees = sorted((build(sum(1 << i for i in c)) for c in comps),
-                   key=lambda t: t.cardinality)
-    tree = trees[0]
-    for t in trees[1:]:
-        cardx = tree.cardinality * t.cardinality
-        tree = JoinTree("join", tree.stars | t.stars, cardx,
-                        tree.cost + t.cost + cm.intermediate_weight * cardx,
-                        tree, t, "hash", None)
-    return tree
+    comps = None
+    out: list[JoinTree] = []
+    for b in range(B):
+        if np.isfinite(cost[b, full]):
+            out.append(build(b, full))
+            continue
+        # disconnected query: cartesian-combine components by ascending
+        # cardinality (component masks are member-independent)
+        if comps is None:
+            comps = _components(graph)
+        trees = sorted((build(b, sum(1 << i for i in c)) for c in comps),
+                       key=lambda t: t.cardinality)
+        tree = trees[0]
+        for t in trees[1:]:
+            cardx = tree.cardinality * t.cardinality
+            tree = JoinTree("join", tree.stars | t.stars, cardx,
+                            tree.cost + t.cost + cm.intermediate_weight * cardx,
+                            tree, t, "hash", None)
+        out.append(tree)
+    return out
 
 
 # -- reference DP (oracle) ---------------------------------------------------

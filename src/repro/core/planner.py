@@ -18,11 +18,14 @@ Serving-scale additions on top of the paper:
   and a hit under a newer epoch (after ``FederatedStats.remove_source`` /
   ``add_source`` / ``refresh_source``) is a miss — the stale entry is
   lazily evicted and the structure-only signature re-warms naturally.
-* **Batch planning** — ``optimize_batch`` plans each distinct signature once
-  and rebinds the result for its duplicates; across distinct queries the
-  star-cardinality / link-selectivity evaluations are memoized on the shared
-  statistics objects, so a batch amortizes the statistics work its queries
-  have in common.
+* **Batch planning** — ``optimize_batch`` routes through the truly batched
+  pipeline in ``repro.core.batch_planner``: one statistics-epoch snapshot
+  for the whole batch, plan-cache hits and exact-signature duplicates
+  rebound per query, then the remaining queries share a single source-
+  selection pass (per-star/per-probe memo over the union of their stars)
+  and one stacked DP sweep per structural *shape* (star-graph topology +
+  per-star predicate signatures + DISTINCT).  Per query the result is
+  bit-identical to calling ``optimize`` in a loop.
 """
 from __future__ import annotations
 
@@ -72,6 +75,7 @@ class PhysicalPlan:
     optimization_ms: float = 0.0
     fallback: bool = False                   # variable-predicate fallback
     cached: bool = False                     # served from the plan cache
+    stats_epoch: int = 0                     # statistics epoch it was planned under
 
     def subqueries(self) -> list[SubqueryNode]:
         out: list[SubqueryNode] = []
@@ -242,6 +246,8 @@ class OdysseyOptimizer:
         # peak bytes for the join-order DP's per-layer candidate tiles
         # (None == repro.core.join_order.DP_BLOCK_BYTES)
         self.dp_block_bytes = dp_block_bytes
+        # what the last optimize_batch call shared (BatchPlanReport)
+        self.last_batch_report = None
 
     @property
     def stats_epoch(self) -> int:
@@ -250,43 +256,33 @@ class OdysseyOptimizer:
 
     def optimize(self, query: BGPQuery, use_cache: bool = True) -> PhysicalPlan:
         t0 = time.perf_counter()
+        epoch = self.stats_epoch               # one snapshot per planning call
         sig = var_order = None
         if use_cache and self.plan_cache is not None:
             sig, var_order = query_signature(query)
-            entry = self.plan_cache.get(sig, epoch=self.stats_epoch)
+            entry = self.plan_cache.get(sig, epoch=epoch)
             if entry is not None:
                 plan = self._rebind(entry, var_order, query)
                 plan.optimization_ms = (time.perf_counter() - t0) * 1e3
                 return plan
         plan = self._optimize_uncached(query, t0)
+        plan.stats_epoch = epoch
         if sig is not None:
-            self.plan_cache.put(sig, plan, var_order, epoch=self.stats_epoch)
+            self.plan_cache.put(sig, plan, var_order, epoch=epoch)
         return plan
 
     def optimize_batch(self, queries: "list[BGPQuery]") -> "list[PhysicalPlan]":
-        """Plan a batch: each distinct signature is optimized once and rebound
-        for its duplicates; distinct queries still share memoized statistics.
-        Equivalent to ``[self.optimize(q) for q in queries]`` (and implemented
-        that way when the plan cache is enabled), but batching also dedupes
-        when the cache has been turned off."""
-        if self.plan_cache is not None:
-            return [self.optimize(q) for q in queries]
-        plans: list[PhysicalPlan] = []
-        local: dict[tuple, CacheEntry] = {}
-        for q in queries:
-            t0 = time.perf_counter()
-            sig, var_order = query_signature(q)
-            entry = local.get(sig)
-            if entry is not None:
-                plan = self._rebind(entry, var_order, q)
-                plan.optimization_ms = (time.perf_counter() - t0) * 1e3
-            else:
-                plan = self._optimize_uncached(q, t0)
-                # pristine detached copy, same reason as PlanCache.put
-                local[sig] = CacheEntry(_detach_plan(plan), var_order,
-                                        self.stats_epoch)
-            plans.append(plan)
-        return plans
+        """Plan a batch through the truly batched pipeline
+        (``repro.core.batch_planner.plan_batch``): one epoch snapshot,
+        plan-cache hits and exact-signature duplicates rebound per query,
+        one shared source-selection pass over the union of the remaining
+        queries' stars, and one stacked DP sweep per structural shape.
+        Bit-identical per query to ``[self.optimize(q) for q in queries]``
+        — batching changes the planning cost, never the plans.  The
+        sharing achieved is reported on ``self.last_batch_report``."""
+        from repro.core.batch_planner import plan_batch
+
+        return plan_batch(self, queries)
 
     def _optimize_uncached(self, query: BGPQuery, t0: float) -> PhysicalPlan:
         graph = decompose(query)
@@ -294,7 +290,8 @@ class OdysseyOptimizer:
         tree = dp_join_order(graph, self.stats, sel, self.cost_model, query.distinct,
                              block_bytes=self.dp_block_bytes)
         root = self._emit(tree, graph, sel, query)
-        plan = PhysicalPlan(root=root, query=query, graph=graph, selection=sel)
+        plan = PhysicalPlan(root=root, query=query, graph=graph, selection=sel,
+                            stats_epoch=self.stats_epoch)
         plan.fallback = any(s.has_var_pred for s in graph.stars)
         plan.optimization_ms = (time.perf_counter() - t0) * 1e3
         return plan
@@ -313,11 +310,13 @@ class OdysseyOptimizer:
         if cached_order == var_order:
             return replace(cached, root=_copy_node(cached.root), query=query,
                            selection=cached.selection.detach(),
-                           graph=cached.graph.detach(), cached=True)
+                           graph=cached.graph.detach(), cached=True,
+                           stats_epoch=entry.epoch)
         ren = dict(zip(cached_order, var_order))
         root = _rename_node(cached.root, ren)
         return replace(cached, root=root, query=query, graph=decompose(query),
-                       selection=cached.selection.detach(), cached=True)
+                       selection=cached.selection.detach(), cached=True,
+                       stats_epoch=entry.epoch)
 
     # -- plan emission with subquery merging (§3.4 step iii) ---------------
     def _emit(self, tree: JoinTree, graph: StarGraph, sel: SourceSelection,

@@ -47,6 +47,54 @@ class SourceSelection:
         )
 
 
+# --------------------------------------------------------------------------
+# Shared probe/stat memo for batched selection
+# --------------------------------------------------------------------------
+
+def _star_key(star: Star) -> tuple:
+    """Everything per-star relevance depends on: subject constant (or var),
+    the *ordered* bound-predicate list, and the unprunable-var-pred flag.
+    Object constants are deliberately absent — they never affect selection,
+    which is what lets templated queries share one selection."""
+    subj = star.subject.tid if isinstance(star.subject, Const) else None
+    return (subj, tuple(star.bound_preds()), star.has_var_pred)
+
+
+def selection_key(graph: StarGraph) -> tuple:
+    """Everything ``select_sources`` depends on: per-star keys plus the
+    ordered edge list.  Graphs with equal keys get equal selections, so a
+    batch computes one selection per distinct key."""
+    return (tuple(_star_key(s) for s in graph.stars),
+            tuple((e.src, e.dst, e.pred, e.generic) for e in graph.edges))
+
+
+class SelectionMemo:
+    """Cross-query memo for ``select_sources_batch``: per-star relevant-CS
+    scans, federated-CS candidate sets, and CP edge-viability probes are
+    priced once for the whole batch.  Values are exactly what the unmemoized
+    code computes (same functions, same inputs), so memoized selections stay
+    bit-identical to ``select_sources`` without a memo; the arrays stored
+    here are treated as immutable (the same contract ``star_cs`` already
+    has across ``SourceSelection.detach`` copies)."""
+
+    def __init__(self) -> None:
+        self.star_rel: dict[tuple, tuple[list[int], dict[int, np.ndarray]]] = {}
+        self.fed_cand: dict[frozenset, set[int]] = {}
+        self.cp_probe: dict[tuple, bool] = {}
+
+    def edge_viable(self, stats: FederatedStats, a: int, b: int, pred: int,
+                    rel1: np.ndarray, rel2: np.ndarray) -> bool:
+        """Memoized "does a CP link a relevant CS of ``a`` to one of ``b``
+        via ``pred``" probe — the inner test of the CP pruning fixpoint."""
+        key = (a, b, pred, rel1.tobytes(), rel2.tobytes())
+        hit = self.cp_probe.get(key)
+        if hit is None:
+            cp = stats.cp_between(a, b)
+            hit = cp is not None and len(cp.select(pred, rel1, rel2)) > 0
+            self.cp_probe[key] = hit
+        return hit
+
+
 def _star_relevant_cs(star: Star, stats: FederatedStats, src: int) -> np.ndarray:
     cs = stats.cs[src]
     preds = star.bound_preds()
@@ -78,28 +126,55 @@ def _fed_cs_candidates(star: Star, stats: FederatedStats) -> set[int]:
     return out
 
 
-def select_sources(graph: StarGraph, stats: FederatedStats) -> SourceSelection:
+def _star_candidates(star: Star, stats: FederatedStats,
+                     memo: SelectionMemo | None,
+                     ) -> tuple[list[int], dict[int, np.ndarray]]:
+    """Pre-pruning candidates of one star: ``(star_sources, star_cs)``.
+    Memoized on ``_star_key`` when a batch memo is supplied — the block
+    depends on nothing else."""
+    key = _star_key(star) if memo is not None else None
+    if memo is not None:
+        hit = memo.star_rel.get(key)
+        if hit is not None:
+            srcs, rel = hit
+            return list(srcs), dict(rel)
     n_src = len(stats.cs)
-    star_sources: list[list[int]] = []
-    star_cs: list[dict[int, np.ndarray]] = []
-
-    for star in graph.stars:
-        if star.has_var_pred and not star.bound_preds():
-            # variable predicate with nothing to prune on: all sources
-            srcs = list(range(n_src))
-            star_cs.append({s: np.arange(stats.cs[s].n_cs, dtype=np.int32) for s in srcs})
-            star_sources.append(srcs)
-            continue
-        rel: dict[int, np.ndarray] = {}
+    if star.has_var_pred and not star.bound_preds():
+        # variable predicate with nothing to prune on: all sources
+        srcs = list(range(n_src))
+        rel = {s: np.arange(stats.cs[s].n_cs, dtype=np.int32) for s in srcs}
+    else:
+        rel = {}
         for s in range(n_src):
             r = _star_relevant_cs(star, stats, s)
             if len(r):
                 rel[s] = r
-        for s in _fed_cs_candidates(star, stats):
+        if memo is not None:
+            fkey = frozenset(star.bound_preds())
+            fed = memo.fed_cand.get(fkey)
+            if fed is None:
+                fed = _fed_cs_candidates(star, stats)
+                memo.fed_cand[fkey] = fed
+        else:
+            fed = _fed_cs_candidates(star, stats)
+        for s in fed:
             if s not in rel:
                 rel[s] = np.arange(stats.cs[s].n_cs, dtype=np.int32)
+        srcs = sorted(rel)
+    if memo is not None:
+        memo.star_rel[key] = (list(srcs), dict(rel))
+    return srcs, rel
+
+
+def select_sources(graph: StarGraph, stats: FederatedStats,
+                   memo: SelectionMemo | None = None) -> SourceSelection:
+    star_sources: list[list[int]] = []
+    star_cs: list[dict[int, np.ndarray]] = []
+
+    for star in graph.stars:
+        srcs, rel = _star_candidates(star, stats, memo)
         star_cs.append(rel)
-        star_sources.append(sorted(rel))
+        star_sources.append(srcs)
 
     sel = SourceSelection(star_sources=star_sources, star_cs=star_cs)
 
@@ -121,11 +196,12 @@ def select_sources(graph: StarGraph, stats: FederatedStats) -> SourceSelection:
                     rel2 = sel.star_cs[e.dst].get(b)
                     if rel2 is None or len(rel2) == 0:
                         continue
-                    cp = stats.cp_between(a, b)
-                    if cp is None:
-                        continue
-                    rows = cp.select(e.pred, rel1, rel2)
-                    if len(rows):
+                    if memo is not None:
+                        hit = memo.edge_viable(stats, a, b, e.pred, rel1, rel2)
+                    else:
+                        cp = stats.cp_between(a, b)
+                        hit = cp is not None and len(cp.select(e.pred, rel1, rel2)) > 0
+                    if hit:
                         viable.add((a, b))
                         ok_src.add(a)
                         ok_dst.add(b)
@@ -150,6 +226,36 @@ def select_sources(graph: StarGraph, stats: FederatedStats) -> SourceSelection:
         sel.edge_pairs[ei] = {(a, b) for (a, b) in pairs
                               if a in keep_a and b in keep_b}
     return sel
+
+
+def select_sources_batch(graphs: "list[StarGraph]", stats: FederatedStats,
+                         memo: SelectionMemo | None = None,
+                         ) -> "list[SourceSelection]":
+    """Source selection over a whole batch, priced once where queries agree:
+
+    * graphs with equal ``selection_key`` (selection ignores object
+      constants, so every instance of a query template shares one key) run
+      the pruning fixpoint **once**; every member receives a detached copy
+      (fresh containers + empty per-query memo) of the shared result;
+    * across *distinct* keys the per-star relevant-CS scans, federated-CS
+      candidate sets and CP edge-viability probes still dedupe through the
+      shared ``SelectionMemo``, so a star repeated across shapes is priced
+      once for the union of the batch's stars.
+
+    Each returned selection is bit-identical to ``select_sources(graph,
+    stats)`` on its own — the memo only skips recomputing values the
+    unmemoized path would derive identically."""
+    memo = memo if memo is not None else SelectionMemo()
+    done: dict[tuple, SourceSelection] = {}
+    out: list[SourceSelection] = []
+    for g in graphs:
+        key = selection_key(g)
+        base = done.get(key)
+        if base is None:
+            base = select_sources(g, stats, memo=memo)
+            done[key] = base
+        out.append(base.detach())
+    return out
 
 
 def _prune_star_cs(rel: dict[int, np.ndarray], keep: list[int]) -> None:

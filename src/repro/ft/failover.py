@@ -114,6 +114,50 @@ class FailoverSession:
                 self.exclude(sid)
                 replans += 1
 
+    def execute_batch(self, queries: "list[BGPQuery]") -> "list[FailoverResult]":
+        """Failover-aware batch execution on the truly batched planner: the
+        whole batch is planned in one ``optimize_batch`` call (shared source
+        selection, one DP sweep per shape, one epoch snapshot), then executed
+        query by query.  When an endpoint turns out dead it is excluded once
+        and the *remaining* queries are replanned as a (smaller) batch under
+        the new epoch — completed queries keep their results, so a mid-batch
+        death costs one exclusion plus one batched replan, not per-query
+        rebuilds.
+
+        A ``RuntimeError`` with no dead endpoint to blame propagates and the
+        call is all-or-nothing — the same contract as the sequential
+        ``[session.execute(q) for q in queries]`` it replaces; callers that
+        must keep partial progress through *non-endpoint* failures should
+        fall back to per-query ``execute``."""
+        results: "list[FailoverResult | None]" = [None] * len(queries)
+        pending = list(range(len(queries)))
+        replans = 0
+        while pending:
+            plans = self.optimizer.optimize_batch([queries[i] for i in pending])
+            engine = FailoverEngine(self.fed)
+            still: list[int] = []
+            excluded_now = False
+            for i, plan in zip(pending, plans):
+                if excluded_now:
+                    still.append(i)       # replan under the new epoch
+                    continue
+                try:
+                    rows, metrics = self.retry.run(engine.execute, plan)
+                    results[i] = FailoverResult(
+                        rows=rows, metrics=metrics, partial=bool(self.excluded),
+                        excluded=list(self.excluded), replans=replans,
+                        cache_hit=plan.cached, stats_epoch=plan.stats_epoch)
+                except RuntimeError:
+                    sid = self._find_dead()
+                    if sid is None:
+                        raise
+                    self.exclude(sid)
+                    excluded_now = True
+                    replans += 1
+                    still.append(i)
+            pending = still
+        return results      # type: ignore[return-value]
+
     def _find_dead(self) -> int | None:
         for i, s in enumerate(self.fed.sources):
             if isinstance(s, FlakySource) and s.dead:

@@ -1,3 +1,4 @@
 from repro.serve.engine import ServeEngine
+from repro.serve.query import QueryServeEngine
 
-__all__ = ["ServeEngine"]
+__all__ = ["ServeEngine", "QueryServeEngine"]

@@ -1,0 +1,294 @@
+"""Truly batched planning (``repro.core.batch_planner``): a mixed-shape
+batch must be bit-identical, per query, to the sequential ``optimize`` loop;
+source selection and the DP sweep must share work across the batch; the
+whole batch must be planned under a single statistics-epoch snapshot; and
+exact duplicates must be flagged ``cached`` even with the plan cache off."""
+import numpy as np
+import pytest
+
+from repro.core.batch_planner import BatchPlanReport, pricing_key, shape_key
+from repro.core.decomposition import decompose
+from repro.core.join_order import (
+    dp_join_order,
+    dp_join_order_batch,
+    star_graph_topology,
+)
+from repro.core.planner import OdysseyOptimizer
+from repro.core.source_selection import select_sources, select_sources_batch
+from repro.engine.local import LocalEngine, naive_evaluate
+
+
+# -- template instantiation ---------------------------------------------------
+# Variants of a workload query that exercise the batch pipeline's sharing
+# tiers: object-constant variants share a pricing key (estimates ignore
+# object values), subject-constant variants share only the *shape* (their
+# selections and cardinalities differ), exact copies share the signature.
+# The instantiation helpers are the benchmark's own — one source of truth,
+# so the equivalence tests and the CI-gated batch scenario exercise the same
+# sharing tiers.
+from benchmarks.planner_bench import object_variants, subject_variants
+
+
+def _mixed_batch(tiny_fed, tiny_workload, size=64):
+    fed, _ = tiny_fed
+    base = list(tiny_workload)
+    for q in tiny_workload:
+        if len(q.patterns) >= 2:
+            base.extend(object_variants(q, fed, 6))
+            base.extend(subject_variants(q, fed, 4))
+    base.extend(tiny_workload[:4])                  # exact duplicates
+    batch = list(base)
+    while len(batch) < size:                        # cycle to the target size
+        batch.append(base[len(batch) % len(base)])
+    return batch[:size]
+
+
+def _plan_fingerprint(plan):
+    """Everything a caller can observe about a plan, with exact floats."""
+    from test_plan_cache import _plan_shape
+
+    cards = []
+
+    def walk(n):
+        cards.append(n.est_cardinality)
+        if hasattr(n, "left"):
+            walk(n.left)
+            walk(n.right)
+
+    walk(plan.root)
+    return (_plan_shape(plan.root), tuple(cards), plan.fallback,
+            tuple(tuple(s) for s in plan.selection.star_sources))
+
+
+# -- the differential: batch == loop, bitwise --------------------------------
+
+def test_optimize_batch_matches_sequential_mixed_shapes(tiny_fed, tiny_stats,
+                                                        tiny_workload):
+    fed, _ = tiny_fed
+    batch = _mixed_batch(tiny_fed, tiny_workload, size=64)
+    shapes = {shape_key(decompose(q), q.distinct) for q in batch}
+    prices = {pricing_key(decompose(q), q.distinct) for q in batch}
+    assert len(shapes) >= 4, "batch must mix structural shapes"
+    assert len(prices) > len(shapes), "batch must mix pricing keys per shape"
+
+    opt_loop = OdysseyOptimizer(tiny_stats)
+    opt_batch = OdysseyOptimizer(tiny_stats)
+    plans_l = [opt_loop.optimize(q) for q in batch]
+    plans_b = opt_batch.optimize_batch(batch)
+
+    assert len(plans_b) == len(batch)
+    for q, pl, pb in zip(batch, plans_l, plans_b):
+        assert _plan_fingerprint(pl) == _plan_fingerprint(pb), q.name
+        assert pl.cached == pb.cached, q.name
+        assert pl.stats_epoch == pb.stats_epoch == 0
+    # cache-counter parity with the loop: same hits, same entries
+    assert opt_batch.plan_cache.hits == opt_loop.plan_cache.hits
+    assert len(opt_batch.plan_cache) == len(opt_loop.plan_cache)
+    report = opt_batch.last_batch_report
+    assert isinstance(report, BatchPlanReport)
+    assert report.n_queries == len(batch)
+    assert report.n_planned + report.duplicates + report.cache_hits == len(batch)
+    # the whole point: fewer sweeps and selections than planned queries
+    assert report.n_shapes < report.n_planned
+    assert report.n_priced < report.n_planned
+    assert report.n_selections <= report.n_priced
+
+    # executed results agree bytewise on a structural sample
+    eng = LocalEngine(fed)
+    seen = set()
+    for q, pl, pb in zip(batch, plans_l, plans_b):
+        key = shape_key(decompose(q), q.distinct)
+        if key in seen:
+            continue
+        seen.add(key)
+        rl, _ = eng.execute(pl)
+        rb, _ = eng.execute(pb)
+        for v in q.effective_projection():
+            assert rl[v].tobytes() == rb[v].tobytes()
+
+
+def test_optimize_batch_second_batch_all_cache_hits(tiny_stats, tiny_workload):
+    opt = OdysseyOptimizer(tiny_stats)
+    batch = list(tiny_workload)
+    first = opt.optimize_batch(batch)
+    assert any(not p.cached for p in first)
+    second = opt.optimize_batch(batch)
+    assert all(p.cached for p in second)
+    assert opt.last_batch_report.n_planned == 0
+    for p1, p2 in zip(first, second):
+        assert _plan_fingerprint(p1) == _plan_fingerprint(p2)
+
+
+# -- satellite fix: duplicates are hits even with the cache off --------------
+
+def test_optimize_batch_cache_off_duplicates_marked_cached(tiny_stats,
+                                                           tiny_workload):
+    opt = OdysseyOptimizer(tiny_stats, plan_cache_size=0)
+    assert opt.plan_cache is None
+    q = tiny_workload[0]
+    plans = opt.optimize_batch([q, q, q])
+    assert [p.cached for p in plans] == [False, True, True], \
+        "in-batch duplicates must be flagged like PlanCache hits"
+    assert all(p.optimization_ms >= 0.0 for p in plans)
+    assert opt.last_batch_report.duplicates == 2
+    fps = {_plan_fingerprint(p) for p in plans}
+    assert len(fps) == 1
+
+
+# -- satellite: one epoch snapshot for the whole batch -----------------------
+
+def test_optimize_batch_snapshots_epoch_once(tiny_fed, tiny_stats,
+                                             tiny_workload, monkeypatch):
+    """A statistics mutation landing mid-batch (after the snapshot) must not
+    split the batch across epochs: every plan carries the snapshot epoch and
+    every cache entry is keyed under it (so all of them go stale together)."""
+    import repro.core.batch_planner as bp
+
+    fed, _ = tiny_fed
+    stats = tiny_stats.clone()              # never mutate the session fixture
+    opt = OdysseyOptimizer(stats)
+    epoch0 = stats.epoch
+
+    real_select = bp.select_sources_batch
+    fired = {"n": 0}
+
+    def select_then_mutate(graphs, s, memo=None):
+        out = real_select(graphs, s, memo=memo)
+        if fired["n"] == 0:                 # one mid-batch refresh
+            fired["n"] = 1
+            stats.refresh_source(0, fed.sources[0].table)
+        return out
+
+    monkeypatch.setattr(bp, "select_sources_batch", select_then_mutate)
+    batch = [q for q in tiny_workload if len(q.patterns) >= 2]
+    plans = opt.optimize_batch(batch)
+
+    assert fired["n"] == 1 and stats.epoch == epoch0 + 1
+    assert {p.stats_epoch for p in plans} == {epoch0}, \
+        "batch emitted plans from two epochs"
+    # every entry was keyed under the snapshot => uniformly stale now: the
+    # next (post-mutation) planning of any member is a miss, not a hit
+    monkeypatch.setattr(bp, "select_sources_batch", real_select)
+    replan = opt.optimize(batch[0])
+    assert not replan.cached
+    assert replan.stats_epoch == epoch0 + 1
+
+
+# -- the shared layers, differentially ---------------------------------------
+
+def test_select_sources_batch_matches_single(tiny_fed, tiny_stats,
+                                             tiny_workload):
+    fed, _ = tiny_fed
+    batch = _mixed_batch(tiny_fed, tiny_workload, size=24)
+    graphs = [decompose(q) for q in batch]
+    sels_b = select_sources_batch(graphs, tiny_stats)
+    for q, g, sb in zip(batch, graphs, sels_b):
+        s1 = select_sources(g, tiny_stats)
+        assert s1.star_sources == sb.star_sources, q.name
+        assert s1.edge_pairs == sb.edge_pairs, q.name
+        assert [sorted(d) for d in s1.star_cs] == [sorted(d) for d in sb.star_cs]
+        for d1, d2 in zip(s1.star_cs, sb.star_cs):
+            for k in d1:
+                assert np.array_equal(d1[k], d2[k]), (q.name, k)
+
+
+def test_dp_join_order_batch_matches_single(tiny_stats, tiny_workload):
+    def strategies(t, out):
+        out.append((t.kind, t.strategy, tuple(sorted(t.stars)),
+                    t.cost, t.cardinality))
+        if t.left is not None:
+            strategies(t.left, out)
+            strategies(t.right, out)
+        return out
+
+    groups = {}
+    for q in tiny_workload:
+        g = decompose(q)
+        groups.setdefault((star_graph_topology(g), q.distinct), []).append((q, g))
+    checked = 0
+    for (_, distinct), members in groups.items():
+        graphs = [g for _, g in members]
+        sels = select_sources_batch(graphs, tiny_stats)
+        trees = dp_join_order_batch(graphs, tiny_stats, sels, distinct=distinct)
+        for (q, g), tree in zip(members, trees):
+            single = dp_join_order(g, tiny_stats, select_sources(g, tiny_stats),
+                                   distinct=distinct)
+            assert strategies(single, []) == strategies(tree, []), q.name
+            checked += 1
+    assert checked == len(tiny_workload)
+
+
+def test_dp_join_order_batch_weighted_sources(tiny_stats, tiny_workload):
+    """The exclusive-group seed's per-source weight lookup (``source_weight``
+    set) must keep batch == single == reference — this path is outside the
+    default-cost differential tests."""
+    from repro.core.cost import CostModel
+    from repro.core.join_order import dp_join_order_ref
+
+    cm = CostModel(source_weight={0: 3.0, 2: 0.4, 5: 7.5})
+
+    def strategies(t, out):
+        out.append((t.kind, t.strategy, tuple(sorted(t.stars)), t.cost,
+                    t.cardinality, tuple(t.sources) if t.sources else None))
+        if t.left is not None:
+            strategies(t.left, out)
+            strategies(t.right, out)
+        return out
+
+    groups = {}
+    for q in tiny_workload:
+        g = decompose(q)
+        groups.setdefault((star_graph_topology(g), q.distinct), []).append((q, g))
+    for (_, distinct), members in groups.items():
+        graphs = [g for _, g in members]
+        sels = select_sources_batch(graphs, tiny_stats)
+        trees = dp_join_order_batch(graphs, tiny_stats, sels, cm, distinct)
+        for (q, g), tb in zip(members, trees):
+            single = dp_join_order(g, tiny_stats, select_sources(g, tiny_stats),
+                                   cm, distinct)
+            ref = dp_join_order_ref(g, tiny_stats, select_sources(g, tiny_stats),
+                                    cm, distinct)
+            assert strategies(single, []) == strategies(tb, []), q.name
+            assert single.leaf_order() == ref.leaf_order(), q.name
+            assert np.isclose(single.cost, ref.cost, rtol=1e-9), q.name
+
+
+def test_dp_join_order_batch_rejects_mixed_topology(tiny_stats, tiny_workload):
+    by_topo = {}
+    for q in tiny_workload:
+        g = decompose(q)
+        by_topo.setdefault(star_graph_topology(g), g)
+    assert len(by_topo) >= 2
+    graphs = list(by_topo.values())[:2]
+    sels = [select_sources(g, tiny_stats) for g in graphs]
+    with pytest.raises(ValueError, match="topology"):
+        dp_join_order_batch(graphs, tiny_stats, sels)
+
+
+# -- the batched serving surface ---------------------------------------------
+
+def test_query_serve_engine_batches_and_answers(tiny_fed, tiny_stats,
+                                                tiny_workload):
+    from repro.serve.query import QueryServeEngine
+
+    fed, _ = tiny_fed
+    eng = QueryServeEngine(fed, tiny_stats, max_batch=16)
+    wave = [q for q in tiny_workload for _ in range(2)]
+    for q in wave:
+        eng.submit(q)
+    done = eng.run_until_done()
+    assert len(done) == len(wave)
+    for req in done:
+        want = naive_evaluate(fed, req.query)
+        proj = req.query.effective_projection()
+        n = len(next(iter(req.rows.values()))) if req.rows else 0
+        got = set(zip(*[req.rows[v].tolist() for v in proj])) if n else set()
+        assert got == want, req.query.name
+    # in-wave duplicates are already hits; a repeat wave is all hits
+    assert eng.serve_stats.plan_cache_hits >= len(tiny_workload)
+    served = eng.serve_stats.n_served
+    for q in tiny_workload:
+        eng.submit(q)
+    eng.run_until_done()
+    assert eng.serve_stats.n_served == served + len(tiny_workload)
+    assert eng.serve_stats.n_planned == eng.optimizer.plan_cache.misses

@@ -87,6 +87,42 @@ def test_failover_session_plan_cache_survives_replan(small_fed, small_stats, wor
         assert _result_set(r2.rows, proj) == want
 
 
+def test_failover_session_execute_batch(small_fed, small_stats, workload):
+    """Batched failover: one optimize_batch plans the whole workload; a dead
+    endpoint costs one exclusion plus one batched replan of the remaining
+    queries (not per-query rebuilds), answers match the surviving federation,
+    and a repeat batch is served from the plan cache under one epoch."""
+    fed, _ = small_fed
+    srcs = [FlakySource(s, dead=(s.name == "DBpedia")) for s in fed.sources]
+    flaky = Federation(srcs, fed.dictionary)
+    survivors = Federation([s for s in fed.sources if s.name != "DBpedia"],
+                           fed.dictionary)
+    session = FailoverSession(flaky, small_stats)
+    first = session.execute_batch(workload)
+    assert len(first) == len(workload)
+    assert session.excluded == ["DBpedia"]
+    assert any(r.replans >= 1 for r in first), "no query touched the dead endpoint?"
+    for q, r in zip(workload, first):
+        assert _result_set(r.rows, q.effective_projection()) == \
+            naive_evaluate(survivors, q)
+    epoch = session.stats.epoch
+    assert epoch >= 1
+    kill = next(i for i, r in enumerate(first) if r.replans >= 1)
+    second = session.execute_batch(workload)
+    # one epoch for the whole repeat batch; queries replanned after the
+    # exclusion are cache hits, pre-exclusion plans are epoch-stale and
+    # replanned exactly once — the third batch hits throughout
+    assert {r.stats_epoch for r in second} == {epoch}
+    assert all(r.cache_hit and r.replans == 0 for r in second[kill:])
+    assert all(not r.cache_hit for r in second[:kill])
+    assert all(r.partial and r.excluded == ["DBpedia"] for r in second)
+    third = session.execute_batch(workload)
+    assert all(r.cache_hit and r.replans == 0 for r in third)
+    for q, r in zip(workload, second):
+        assert _result_set(r.rows, q.effective_projection()) == \
+            naive_evaluate(survivors, q)
+
+
 def test_failover_session_restore_recovers_completeness(small_fed, small_stats, workload):
     """Recovery: after the endpoint comes back, restore() re-admits it via
     add_source and results are complete again (partial flag clears)."""
