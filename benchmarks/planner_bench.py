@@ -302,6 +302,57 @@ def run(scale: float = 1.0, reps: int = 9, seeds_per_size: int = 2):
     return csv, "\n".join(lines), metrics
 
 
+def run_dp_backends(reps: int = 3, batch: int = 8):
+    """Informational jax-vs-numpy sweep comparison: one shape group planned
+    through ``dp_join_order_batch`` with ``dp_backend='numpy'`` (in-process
+    array ops) and ``dp_backend='jax'`` (the ``repro.kernels.dp_layer``
+    Pallas kernel — *interpret mode* on this CPU container, so numpy is
+    expected to win here; the jax path exists for the TPU deployment).
+    Verifies the two backends return bit-identical plans, then reports
+    ``dp_sweep_jax_vs_numpy_x`` (= numpy_ms / jax_ms; >1 would mean jax is
+    winning) into ``results/bench_quick.json`` as a NEW metric the CI gate
+    starts guarding after the next baseline refresh."""
+    from repro.core.join_order import dp_join_order_batch
+    from repro.rdf.shapes import shaped_planning_inputs
+
+    cm = CostModel()
+    graph, stats, sel, q = shaped_planning_inputs("tree", 8, seed=41)
+    graphs, sels = [graph] * batch, [sel] * batch
+
+    def sweep(backend):
+        return dp_join_order_batch(graphs, stats, sels, cm, q.distinct,
+                                   dp_backend=backend)
+
+    def fingerprint(t):
+        out = [(t.kind, t.strategy, tuple(sorted(t.stars)), t.cost,
+                t.cardinality, tuple(t.sources) if t.sources else None)]
+        if t.left is not None:
+            out += fingerprint(t.left) + fingerprint(t.right)
+        return out
+
+    trees_np, trees_jx = sweep("numpy"), sweep("jax")   # warm memos + jit
+    for a, b in zip(trees_np, trees_jx):
+        assert fingerprint(a) == fingerprint(b), \
+            "jax DP backend diverged from numpy plans"
+    np_ms = _median_ms(lambda: sweep("numpy"), reps)
+    jx_ms = _median_ms(lambda: sweep("jax"), reps)
+    ratio = np_ms / max(jx_ms, 1e-9)
+    import jax
+
+    jax.clear_caches()      # the x64 sweep programs are one-shot in a bench
+                            # run; don't carry them under the peak-RSS guard
+    text = "\n".join([
+        "== DP sweep backends (dp_join_order_batch, one shape group) ==",
+        f"{q.name} x{batch} members: numpy {np_ms:.2f} ms, jax (Pallas "
+        f"interpret) {jx_ms:.2f} ms -> jax/numpy {ratio:.3f}x",
+        "informational: interpret mode on CPU; the jax backend targets TPU",
+    ])
+    csv = [(f"planner/dp_sweep_numpy_b{batch}", np_ms * 1e3, "numpy_backend"),
+           (f"planner/dp_sweep_jax_b{batch}", jx_ms * 1e3,
+            f"{ratio:.3f}x_vs_numpy")]
+    return csv, text, {"dp_sweep_jax_vs_numpy_x": ratio}
+
+
 def run_large(quick: bool = False, reps: int = 3):
     """Large-star scaling: the chunked + connected bitmask DP on synthetic
     chains / trees / cliques past the old 14-star ``MAX_BITMASK_STARS``

@@ -34,6 +34,7 @@ HIGHER_IS_BETTER = {
     "batch_throughput_x": True,
     "stats_remove_speedup_x": True,
     "stats_refresh_speedup_x": True,
+    "dp_sweep_jax_vs_numpy_x": True,
     "peak_rss_mb": False,
 }
 
@@ -77,6 +78,9 @@ def main() -> None:
     # --quick (the CI smoke) asserts batched planning >= 3x the loop
     add(planner_bench.run_batch(scale, assert_speedup=args.quick))
     add(planner_bench.run_large(quick=args.quick))
+    # informational until the next baseline refresh: the on-device (Pallas)
+    # DP layer sweep vs the numpy sweep, bit-identical plans asserted
+    add(planner_bench.run_dp_backends())
     # --quick also asserts incremental failover >= 3x full rebuild
     add(stats_refresh_bench.run(scale, assert_speedup=args.quick))
     add(kernel_bench.run())

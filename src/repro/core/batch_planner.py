@@ -172,7 +172,8 @@ def plan_batch(optimizer, queries: "list[BGPQuery]"):
             trees = dp_join_order_batch(
                 [graphs[r] for r in reps], optimizer.stats,
                 [sels[r] for r in reps], optimizer.cost_model,
-                distinct=key[-1], block_bytes=optimizer.dp_block_bytes)
+                distinct=key[-1], block_bytes=optimizer.dp_block_bytes,
+                dp_backend=optimizer.dp_backend)
             sweep_ms = (time.perf_counter() - t_g) * 1e3
             for fam, tree in zip(fams, trees):
                 rep = fam[0]

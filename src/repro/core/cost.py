@@ -6,11 +6,14 @@ transferred between endpoints during execution." — we implement exactly that,
 with the endpoint-characteristics extension point the paper mentions
 (per-source weight multipliers).
 
-Each formula exists in two forms: the scalar form used when costing a single
-plan node, and a vectorized form (``*_v``) over numpy arrays used by the
-bitmask DP to cost every candidate partition of a subset at once.  The
-vectorized forms keep the exact operation order of the scalar ones so both
-paths produce bit-identical costs for the same inputs.
+Each formula exists in three forms: the scalar form used when costing a
+single plan node, a vectorized form (``*_v``) over numpy arrays used by the
+bitmask DP to cost every candidate partition of a subset at once, and a
+broadcasting jax form (``*_jnp``) used by the on-device layer sweep
+(``repro.kernels.dp_layer``, ``dp_backend='jax'``).  The vectorized and jax
+forms keep the exact operation order of the scalar ones — the same
+additions and multiplications, associated the same way — so all paths
+produce bit-identical float64 costs for the same inputs.
 """
 from __future__ import annotations
 
@@ -28,7 +31,10 @@ class CostModel:
     source_weight: dict[int, float] = field(default_factory=dict)  # endpoint tuning
 
     def src_w(self, sources: "list[int]") -> float:
-        if not self.source_weight:
+        # empty `sources` (a star pruned to zero endpoints) weighs 1.0, like
+        # an unknown id — leaf costing must not crash on an unsatisfiable
+        # star just because per-endpoint weights are configured
+        if not self.source_weight or not sources:
             return 1.0
         return max(self.source_weight.get(s, 1.0) for s in sources)
 
@@ -89,3 +95,38 @@ class CostModel:
         bc = cost_a + self.bind_join_cost_v(card_a, card_out, n_src_b, src_w_b)
         is_bind = bindable_b & (bc < hc)
         return np.where(is_bind, bc, hc), is_bind
+
+    # -- jax twins (broadcasting; used by the on-device layer sweep) ---------
+    # jax is imported lazily so the numpy planning path never pays for it;
+    # callers (repro.kernels.dp_layer) run under jax.experimental.enable_x64
+    # so every formula evaluates in float64, exactly like the numpy forms.
+
+    def leaf_cost_jnp(self, card, n_src, src_w):
+        import jax.numpy as jnp
+
+        return (self.transfer_weight * card * src_w
+                + self.request_cost * jnp.maximum(1, n_src))
+
+    def hash_join_cost_jnp(self, card_out):
+        return self.intermediate_weight * card_out
+
+    def bind_join_cost_jnp(self, card_left, card_out, n_src, src_w):
+        import jax.numpy as jnp
+
+        n_req = jnp.maximum(1.0, card_left / self.bind_batch) * n_src
+        return (self.request_cost * n_req
+                + self.transfer_weight * card_out * src_w
+                + self.intermediate_weight * card_out)
+
+    def join_candidates_jnp(self, cost_a, cost_b, card_out, hash_out,
+                            card_a, n_src_b, src_w_b, bindable_b):
+        """``join_candidates_v`` over jax arrays with the same operation
+        order; operands may broadcast (the layer kernel passes per-column
+        ``card_out``/``hash_out`` against per-pair blocks)."""
+        import jax.numpy as jnp
+
+        hc = cost_a + cost_b
+        hc = hc + hash_out
+        bc = cost_a + self.bind_join_cost_jnp(card_a, card_out, n_src_b, src_w_b)
+        is_bind = bindable_b & (bc < hc)
+        return jnp.where(is_bind, bc, hc), is_bind

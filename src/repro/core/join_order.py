@@ -30,7 +30,15 @@ Two DP implementations share the same plan space and cost model:
                        with identical ``star_graph_topology`` — stacking the
                        per-layer candidate tensors along a member axis, and
                        returns per-member trees bit-identical to planning
-                       each member alone.
+                       each member alone.  Both forms take
+                       ``dp_backend='numpy'|'jax'``: the numpy backend runs
+                       the tiled layer sweep in-process; the jax backend
+                       prices each layer tile through the Pallas kernel
+                       ``repro.kernels.dp_layer`` (grid over member ×
+                       column-tile × row-tile, float64, ``interpret=True``
+                       on CPU) with identical enumeration order and
+                       first-strict-minimum tie-breaking, so the two
+                       backends return bit-identical plans.
 ``dp_join_order_ref``  the original frozenset/`itertools.combinations`
                        formulation with unmemoized statistics, kept as the
                        reference oracle — tests assert the bitmask DP returns
@@ -245,6 +253,20 @@ def _star_edge_statistics(graph: StarGraph, stats: FederatedStats,
 DP_BLOCK_BYTES = 256 * 1024 * 1024
 _PAIR_BYTES = 160
 
+# Floor on the per-tile pair count.  Without it a large member count (or a
+# tiny ``block_bytes``) degenerates ``block_bytes / (_PAIR_BYTES * B)`` to
+# 1-pair tiles, turning the vectorized sweep into a Python-level per-pair
+# loop.  When a member-stacked sweep cannot afford this floor within its
+# budget, ``_dp_sweep`` splits the *member axis* into sub-batches that can
+# (plans are per-member bit-identical either way); a single-member sweep
+# keeps the floor even when it nominally exceeds a pathological budget —
+# bounded planning time wins over a sub-kilobyte memory cap.
+MIN_TILE_ELEMS = 1024
+
+DP_BACKENDS = ("numpy", "jax")
+
+_STRAT_SINGLE, _STRAT_EXCL, _STRAT_HASH, _STRAT_BIND = 1, 2, 3, 4
+
 # Proper nonempty submasks of an s-element set, *relative* to the set's bit
 # positions (bit j == j-th smallest member), in the reference enumeration
 # order: popcount ascending, combination-lex within a popcount.  Lex order on
@@ -370,6 +392,7 @@ def dp_join_order(
     cost_model: CostModel | None = None,
     distinct: bool = True,
     block_bytes: int | None = None,
+    dp_backend: str = "numpy",
 ) -> JoinTree:
     """Exact DP over connected star subsets, vectorized over bitmasks.
 
@@ -396,10 +419,14 @@ def dp_join_order(
     minimum tie-breaking exactly, so both DPs return the same plan.
 
     Implemented as the single-member case of ``_dp_sweep`` — the same sweep
-    ``dp_join_order_batch`` runs over a whole shape group at once."""
+    ``dp_join_order_batch`` runs over a whole shape group at once.
+    ``dp_backend='jax'`` prices the layer tiles through the Pallas kernel
+    (``repro.kernels.dp_layer``) instead of the in-process numpy ops; plans
+    are bit-identical across backends."""
     cm = cost_model or CostModel()
     star_card, edge_sel = _star_edge_statistics(graph, stats, sel, distinct)
-    return _dp_sweep(graph, [sel], [star_card], [edge_sel], cm, block_bytes)[0]
+    return _dp_sweep(graph, [sel], [star_card], [edge_sel], cm, block_bytes,
+                     dp_backend)[0]
 
 
 def dp_join_order_batch(
@@ -409,6 +436,7 @@ def dp_join_order_batch(
     cost_model: CostModel | None = None,
     distinct: bool = True,
     block_bytes: int | None = None,
+    dp_backend: str = "numpy",
 ) -> "list[JoinTree]":
     """One DP sweep over a *shape group*: queries whose star graphs share
     ``star_graph_topology`` (star count + ordered edge list).  The layer
@@ -421,8 +449,12 @@ def dp_join_order_batch(
     are element-for-element those of ``dp_join_order``, so each returned
     tree is bit-identical to planning that member alone.
 
-    Tile sizing divides the ``block_bytes`` budget by the member count, so a
-    group sweep obeys the same peak-memory bound as a single query."""
+    Tile sizing divides the ``block_bytes`` budget by the member count
+    (down to the ``MIN_TILE_ELEMS`` floor — past it, the member axis is
+    split across sweeps instead), so a group sweep obeys the same
+    peak-memory bound as a single query.  ``dp_backend='jax'`` runs the
+    per-layer candidate pricing + reduction on-device through
+    ``repro.kernels.dp_layer`` with bit-identical plans."""
     if not graphs:
         return []
     if len(graphs) != len(sels):
@@ -439,7 +471,8 @@ def dp_join_order_batch(
         sc, es = _star_edge_statistics(g, stats, sel, distinct)
         star_cards.append(sc)
         edge_sels.append(es)
-    return _dp_sweep(graphs[0], sels, star_cards, edge_sels, cm, block_bytes)
+    return _dp_sweep(graphs[0], sels, star_cards, edge_sels, cm, block_bytes,
+                     dp_backend)
 
 
 def _dp_sweep(
@@ -449,10 +482,17 @@ def _dp_sweep(
     edge_sels: "list[list[float]]",
     cm: CostModel,
     block_bytes: int | None = None,
+    dp_backend: str = "numpy",
 ) -> "list[JoinTree]":
     """The tiled csg/cmp sweep over ``B = len(sels)`` members sharing one
     graph topology.  Mask enumeration, connectivity and tile layout are
-    member-independent; every numeric array carries a leading member axis."""
+    member-independent; every numeric array carries a leading member axis.
+    ``dp_backend`` selects who prices the layer tiles: ``'numpy'`` (the
+    in-process array ops) or ``'jax'`` (the ``repro.kernels.dp_layer``
+    Pallas kernel); both produce bit-identical plans."""
+    if dp_backend not in DP_BACKENDS:
+        raise ValueError(f"unknown dp_backend {dp_backend!r} "
+                         f"(expected one of {DP_BACKENDS})")
     n = len(graph.stars)
     B = len(sels)
     if n == 1:
@@ -463,6 +503,23 @@ def _dp_sweep(
                                 cm.leaf_cost(sc[0], sel.star_sources[0]),
                                 sources=list(sel.star_sources[0])))
         return out
+
+    # the tile budget covers the whole member-stacked candidate state, so a
+    # B-member sweep divides the per-tile pair count by B — but never below
+    # the MIN_TILE_ELEMS floor: a group too wide for its budget is split
+    # along the member axis (per-member plans are identical either way)
+    budget = int(block_bytes or DP_BLOCK_BYTES)
+    tile_elems = budget // (_PAIR_BYTES * B)
+    if tile_elems < MIN_TILE_ELEMS and B > 1:
+        b_max = max(1, budget // (_PAIR_BYTES * MIN_TILE_ELEMS))
+        out = []
+        for i in range(0, B, b_max):
+            out.extend(_dp_sweep(graph, sels[i:i + b_max],
+                                 star_cards[i:i + b_max],
+                                 edge_sels[i:i + b_max], cm, block_bytes,
+                                 dp_backend))
+        return out
+    tile_elems = max(tile_elems, MIN_TILE_ELEMS)
 
     size = 1 << n
     masks = np.arange(size, dtype=np.int64)
@@ -493,7 +550,8 @@ def _dp_sweep(
     bindable = np.zeros((B, size), bool)         # leaf with >=1 source
     n_src = np.zeros((B, size), np.int64)
     src_w = np.ones((B, size))
-    STRAT_SINGLE, STRAT_EXCL, STRAT_HASH, STRAT_BIND = 1, 2, 3, 4
+    STRAT_SINGLE, STRAT_EXCL, STRAT_HASH, STRAT_BIND = (
+        _STRAT_SINGLE, _STRAT_EXCL, _STRAT_HASH, _STRAT_BIND)
     strat = np.zeros((B, size), np.int8)
     split = np.zeros((B, size), np.int64)
     excl_of = np.full((B, size), -1, np.int64)
@@ -509,9 +567,6 @@ def _dp_sweep(
             src_w[b, m] = cm.src_w(srcs)
             strat[b, m] = STRAT_SINGLE
 
-    # the tile budget covers the whole member-stacked candidate state, so a
-    # B-member sweep divides the per-tile pair count by B
-    tile_elems = max(1, int(block_bytes or DP_BLOCK_BYTES) // (_PAIR_BYTES * B))
     # small-star fast path: dense per-layer structures cached across calls,
     # taken whenever the whole dense layer set (< 3^n pairs) fits the budget
     skel = (_layer_skeletons(n)
@@ -617,6 +672,11 @@ def _dp_sweep(
                 valid = conn[A] & conn[Bm]
                 if not valid.any():
                     continue
+                if dp_backend == "jax":
+                    _layer_tile_jax(cm, cost, card, n_src, src_w, bindable,
+                                    A, Bm, valid, card_S, c0, c1,
+                                    run_cost, run_split, run_strat)
+                    continue
                 ci, ri = np.nonzero(valid.T)   # col-major: rows asc per col
                 Af = A[ri, ci]
                 Bf = Bm[ri, ci]
@@ -701,6 +761,41 @@ def _dp_sweep(
                             tree, t, "hash", None)
         out.append(tree)
     return out
+
+
+def _layer_tile_jax(cm: CostModel, cost: np.ndarray, card: np.ndarray,
+                    n_src: np.ndarray, src_w: np.ndarray, bindable: np.ndarray,
+                    A: np.ndarray, Bm: np.ndarray, valid: np.ndarray,
+                    card_S: np.ndarray, c0: int, c1: int,
+                    run_cost: np.ndarray, run_split: np.ndarray,
+                    run_strat: np.ndarray) -> None:
+    """Price one dense ``(rows, cols)`` layer tile through the Pallas kernel
+    and fold the per-column winners into the running state.
+
+    The kernel sees the same candidates as the numpy path — the dense
+    ``(submask A, complement B)`` matrices with the connectivity mask, rows
+    in the reference enumeration order — gathered into ``(B, rows, cols)``
+    per-pair state (the per-subset hash-join cost is derived on-device from
+    ``card_S`` via ``CostModel.hash_join_cost_jnp``, bit-identical to the
+    host ``hash_join_cost_v`` form), and returns each column's first strict
+    minimum.  The strictly-less fold against ``run_cost`` matches the numpy
+    path's cross-tile merge, so backends tie-break identically."""
+    from repro.kernels.dp_layer import dp_layer
+
+    best_c, best_r, best_b = dp_layer(
+        cost[:, A], cost[:, Bm], card[:, A], n_src[:, Bm].astype(np.float64),
+        src_w[:, Bm], bindable[:, Bm], valid, card_S[:, c0:c1],
+        (cm.intermediate_weight, cm.transfer_weight, cm.request_cost,
+         cm.bind_batch))
+    upd = best_c < run_cost[:, c0:c1]
+    if upd.any():
+        bu, cu = np.nonzero(upd)
+        gu = c0 + cu
+        ru = best_r[bu, cu]
+        run_cost[bu, gu] = best_c[bu, cu]
+        run_split[bu, gu] = A[ru, cu]
+        run_strat[bu, gu] = np.where(best_b[bu, cu], _STRAT_BIND,
+                                     _STRAT_HASH).astype(np.int8)
 
 
 # -- reference DP (oracle) ---------------------------------------------------

@@ -36,7 +36,12 @@ from dataclasses import dataclass, field, replace
 from repro.core.cost import CostModel
 from repro.core.decomposition import StarGraph, decompose
 from repro.core.federation import FederatedStats
-from repro.core.join_order import JoinTree, dp_join_order, order_star_patterns
+from repro.core.join_order import (
+    DP_BACKENDS,
+    JoinTree,
+    dp_join_order,
+    order_star_patterns,
+)
 from repro.core.source_selection import SourceSelection, select_sources
 from repro.query.algebra import BGPQuery, Const, Term, TriplePattern, Var
 
@@ -238,7 +243,8 @@ class OdysseyOptimizer:
     cache in front of the full optimization pipeline."""
 
     def __init__(self, stats: FederatedStats, cost_model: CostModel | None = None,
-                 plan_cache_size: int = 1024, dp_block_bytes: int | None = None):
+                 plan_cache_size: int = 1024, dp_block_bytes: int | None = None,
+                 dp_backend: str = "numpy"):
         self.stats = stats
         self.cost_model = cost_model or CostModel()
         self.plan_cache: PlanCache | None = (
@@ -246,6 +252,12 @@ class OdysseyOptimizer:
         # peak bytes for the join-order DP's per-layer candidate tiles
         # (None == repro.core.join_order.DP_BLOCK_BYTES)
         self.dp_block_bytes = dp_block_bytes
+        # who prices the DP's layer tiles: 'numpy' (in-process) or 'jax'
+        # (the repro.kernels.dp_layer Pallas kernel); plans are bit-identical
+        if dp_backend not in DP_BACKENDS:
+            raise ValueError(f"unknown dp_backend {dp_backend!r} "
+                             f"(expected one of {DP_BACKENDS})")
+        self.dp_backend = dp_backend
         # what the last optimize_batch call shared (BatchPlanReport)
         self.last_batch_report = None
 
@@ -288,7 +300,8 @@ class OdysseyOptimizer:
         graph = decompose(query)
         sel = select_sources(graph, self.stats)
         tree = dp_join_order(graph, self.stats, sel, self.cost_model, query.distinct,
-                             block_bytes=self.dp_block_bytes)
+                             block_bytes=self.dp_block_bytes,
+                             dp_backend=self.dp_backend)
         root = self._emit(tree, graph, sel, query)
         plan = PhysicalPlan(root=root, query=query, graph=graph, selection=sel,
                             stats_epoch=self.stats_epoch)

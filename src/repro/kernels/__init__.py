@@ -11,5 +11,8 @@ written with MXU/VPU-aligned block shapes for TPU as the target:
   * ``join_count``      -- per-probe-row match counts against a sorted build
     side (bounded-buffer join sizing in the distributed engine);
   * ``summary_probe``   -- batched bitset AND + popcount between entity
-    summaries (candidate federated-CP pruning).
+    summaries (candidate federated-CP pruning);
+  * ``dp_layer``        -- the join-order DP's per-layer candidate pricing +
+    first-strict-minimum reduction, gridded over (member, column tile, row
+    tile); float64, bit-identical to the numpy sweep (``dp_backend='jax'``).
 """

@@ -1,0 +1,176 @@
+"""Member-batched DP layer sweep — the join-order DP's hot loop on-device.
+
+``repro.core.join_order._dp_sweep`` prices, per popcount layer, every
+(connected subset, connected partition) candidate pair and keeps the first
+strict minimum per subset.  The batched sweep's layer math is pure array ops
+over a member-stacked state, so this kernel maps it onto a Pallas grid over
+``(member, column tile, row tile)`` — exactly the (member, tile) grid the
+roadmap sketches; the row axis is the innermost grid dimension so each
+``(member, column-tile)`` output block accumulates a running
+first-strict-minimum across its row tiles.
+
+Layout: the host gathers the per-pair DP state into dense ``(B, R, C)``
+blocks (member, relative-submask row, connected-subset column) with a
+member-independent ``(R, C)`` validity mask (rows ascend in the reference
+enumeration order: popcount ascending, combination-lex).  Each grid step
+prices one ``(BLOCK_R, BLOCK_C)`` tile of one member through the
+broadcasting ``CostModel.*_jnp`` forms, masks invalid pairs to ``+inf``,
+reduces rows to (min cost, first row attaining it, bind flag at that row)
+and folds the result into the output block under a strictly-less update —
+row tiles ascend, so "first tile to reach the running minimum, first row
+within the tile" reproduces the numpy path's first-strict-minimum
+tie-breaking bit-exactly.
+
+All pricing runs in float64 (the wrapper enters
+``jax.experimental.enable_x64``), matching the numpy DP bit for bit;
+``interpret=True`` is the CPU/CI default like every kernel in this package.
+A TPU deployment would flip to float32 blocks and pay a documented ULP
+tolerance — the differential contract here is exactness.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+from jax.experimental import pallas as pl
+
+BLOCK_R = 128
+BLOCK_C = 128
+_BIG_ROW = np.int32(2**31 - 1)     # "no valid pair in this column"
+
+
+def _kernel(cost_a_ref, cost_b_ref, card_a_ref, n_src_b_ref, src_w_b_ref,
+            bind_ref, valid_ref, card_s_ref,
+            best_c_ref, best_r_ref, best_b_ref, *, cm, block_r):
+    r = pl.program_id(2)
+
+    @pl.when(r == 0)
+    def _init():
+        best_c_ref[...] = jnp.full(best_c_ref.shape, jnp.inf, best_c_ref.dtype)
+        best_r_ref[...] = jnp.full(best_r_ref.shape, _BIG_ROW, jnp.int32)
+        best_b_ref[...] = jnp.zeros(best_b_ref.shape, jnp.int32)
+
+    valid = valid_ref[...] != 0                       # (block_r, bc)
+    bindable = bind_ref[0] != 0
+    card_s = card_s_ref[...]                          # (1, bc) per-subset
+    pair_c, is_bind = cm.join_candidates_jnp(
+        cost_a_ref[0], cost_b_ref[0], card_s, cm.hash_join_cost_jnp(card_s),
+        card_a_ref[0], n_src_b_ref[0], src_w_b_ref[0], bindable)
+    pair_c = jnp.where(valid, pair_c, jnp.inf)
+
+    tile_min = jnp.min(pair_c, axis=0, keepdims=True)           # (1, bc)
+    rows = (jax.lax.broadcasted_iota(jnp.int32, pair_c.shape, 0)
+            + r * block_r)
+    is_min = valid & (pair_c == tile_min)
+    first = jnp.min(jnp.where(is_min, rows, _BIG_ROW), axis=0,
+                    keepdims=True)
+    bind_at = jnp.max(jnp.where(is_min & (rows == first),
+                                is_bind.astype(jnp.int32), 0),
+                      axis=0, keepdims=True)
+
+    # strictly-less running update: an equal minimum in a later row tile
+    # never displaces the earlier (lower-row) one
+    upd = tile_min < best_c_ref[...]
+    best_c_ref[...] = jnp.where(upd, tile_min, best_c_ref[...])
+    best_r_ref[...] = jnp.where(upd, first, best_r_ref[...])
+    best_b_ref[...] = jnp.where(upd, bind_at, best_b_ref[...])
+
+
+def _bucket(n: int, block: int) -> int:
+    """Padded extent for ``n``: the next power of two (>= 8) below ``block``,
+    a multiple of ``block`` above it.  Buckets the kernel's trace shapes so
+    layers/queries of nearby sizes share one compiled program instead of
+    retracing per exact tile shape (padding is inert: ``valid`` is 0 there)."""
+    if n >= block:
+        return n + (-n) % block
+    p = 8
+    while p < n:
+        p *= 2
+    return p
+
+
+def _pad3(x, rp, cp, dtype):
+    out = np.zeros((x.shape[0], rp, cp), dtype)
+    out[:, :x.shape[1], :x.shape[2]] = x
+    return out
+
+
+def _pad2(x, cp, dtype):
+    out = np.zeros((x.shape[0], cp), dtype)
+    out[:, :x.shape[1]] = x
+    return out
+
+
+@functools.lru_cache(maxsize=64)
+def _jitted(params: tuple, interpret: bool):
+    from repro.core.cost import CostModel
+
+    iw, tw, rc, bb = params
+    cm = CostModel(intermediate_weight=iw, transfer_weight=tw,
+                   request_cost=rc, bind_batch=bb)
+
+    @jax.jit
+    def call(cost_a, cost_b, card_a, n_src_b, src_w_b, bindable, valid,
+             card_s):
+        B, R_p, C_p = cost_a.shape          # pre-padded to bucketed extents
+        br, bc = min(BLOCK_R, R_p), min(BLOCK_C, C_p)
+        grid = (B, C_p // bc, R_p // br)
+        pair_spec = pl.BlockSpec((1, br, bc), lambda b, c, r: (b, r, c))
+        col_spec = pl.BlockSpec((1, bc), lambda b, c, r: (b, c))
+        return pl.pallas_call(
+            functools.partial(_kernel, cm=cm, block_r=br),
+            grid=grid,
+            in_specs=[pair_spec] * 6
+            + [pl.BlockSpec((br, bc), lambda b, c, r: (r, c)), col_spec],
+            out_specs=[col_spec, col_spec, col_spec],
+            out_shape=[jax.ShapeDtypeStruct((B, C_p), jnp.float64),
+                       jax.ShapeDtypeStruct((B, C_p), jnp.int32),
+                       jax.ShapeDtypeStruct((B, C_p), jnp.int32)],
+            interpret=interpret,
+        )(cost_a, cost_b, card_a, n_src_b, src_w_b, bindable, valid, card_s)
+
+    return call
+
+
+def dp_layer_program(params: tuple, interpret: bool = True):
+    """The jitted device-level entry: expects pre-padded arrays whose row /
+    column extents are block multiples (see ``_bucket``), ``float64`` pair
+    state and ``int8`` masks, and returns the raw padded outputs.  This is
+    what ``dp_layer`` calls after host-side padding; run it under
+    ``jax.experimental.enable_x64``.  Benchmarks time this directly so the
+    Pallas side is a jitted call on device arrays exactly like the jitted
+    oracle — not the host wrapper with its per-call padding copies."""
+    return _jitted(tuple(float(p) for p in params), bool(interpret))
+
+
+def dp_layer(cost_a, cost_b, card_a, n_src_b, src_w_b, bindable, valid,
+             card_s, params: tuple, interpret: bool = True):
+    """Price one dense layer tile and reduce it per column.
+
+    Inputs are the per-pair gathers described in ``ref.dp_layer_ref`` (same
+    shapes, same semantics); ``params`` is the cost model's
+    ``(intermediate_weight, transfer_weight, request_cost, bind_batch)``.
+    Returns numpy ``(best_cost (B, C) float64, first_row (B, C) int32,
+    is_bind (B, C) bool)`` with the numpy sweep's exact tie-breaking.
+
+    Row/column extents are padded host-side to bucketed trace shapes
+    (powers of two below a block, block multiples above) so nearby tile
+    sizes share one compiled program; padding carries ``valid = 0`` and is
+    invisible in the outputs."""
+    B, R, C = np.shape(cost_a)
+    R_p, C_p = _bucket(R, BLOCK_R), _bucket(C, BLOCK_C)
+    f64 = np.float64
+    with enable_x64():
+        call = dp_layer_program(params, interpret)
+        valid_p = np.zeros((R_p, C_p), np.int8)
+        valid_p[:R, :C] = valid
+        best, row, bind = call(
+            _pad3(cost_a, R_p, C_p, f64), _pad3(cost_b, R_p, C_p, f64),
+            _pad3(card_a, R_p, C_p, f64), _pad3(n_src_b, R_p, C_p, f64),
+            _pad3(src_w_b, R_p, C_p, f64), _pad3(bindable, R_p, C_p, np.int8),
+            valid_p, _pad2(card_s, C_p, f64))
+        return (np.asarray(best)[:, :C], np.asarray(row)[:, :C],
+                np.asarray(bind)[:, :C].astype(bool))

@@ -35,6 +35,40 @@ def summary_probe_ref(a_sig, b_sig) -> jax.Array:
     return popcount32_ref(a_sig[:, None, :] & b_sig[None, :, :]).sum(-1).astype(jnp.int32)
 
 
+def dp_layer_ref(cost_a, cost_b, card_a, n_src_b, src_w_b, bindable, valid,
+                 card_s, params) -> "tuple[jax.Array, jax.Array, jax.Array]":
+    """Oracle for ``kernels/dp_layer.py``: dense candidate pricing + the
+    per-column first-strict-minimum reduction of the join-order DP's layer
+    sweep.
+
+    ``cost_a``/``cost_b``/``card_a``/``n_src_b``/``src_w_b`` are ``(B, R, C)``
+    float64 per-pair gathers (member, relative submask row, connected-subset
+    column), ``bindable`` is ``(B, R, C)`` bool, ``valid`` is the
+    member-independent ``(R, C)`` connectivity mask, ``card_s`` is the
+    ``(B, C)`` per-subset cardinality (the hash-join cost is derived from it
+    in place, as the kernel does), and ``params = (intermediate_weight,
+    transfer_weight, request_cost, bind_batch)``.  Returns per
+    ``(member, column)``: the minimum candidate cost (``inf`` when no pair
+    is valid), the first row attaining it (rows ascend in the reference
+    enumeration order, so first == the numpy DP's first-strict-minimum
+    tie-breaking) and whether that candidate is a bind join.  Runs in
+    float64 — call under ``jax.experimental.enable_x64``."""
+    iw, tw, rc, bb = params
+    hash_s = iw * card_s
+    hc = (cost_a + cost_b) + hash_s[:, None, :]
+    n_req = jnp.maximum(1.0, card_a / bb) * n_src_b
+    bc = cost_a + ((rc * n_req + tw * card_s[:, None, :] * src_w_b)
+                   + iw * card_s[:, None, :])
+    is_bind = bindable & (bc < hc)
+    pair = jnp.where(valid[None, :, :], jnp.where(is_bind, bc, hc), jnp.inf)
+    best = jnp.min(pair, axis=1)
+    rows = jnp.arange(pair.shape[1], dtype=jnp.int32)[None, :, None]
+    is_min = valid[None, :, :] & (pair == best[:, None, :])
+    first = jnp.min(jnp.where(is_min, rows, jnp.int32(2**31 - 1)), axis=1)
+    bind_at = jnp.any(is_min & (rows == first[:, None, :]) & is_bind, axis=1)
+    return best, first, bind_at
+
+
 def ssm_scan_ref(dt, bt, ct, x, a) -> jax.Array:
     """Selective-scan oracle via associative scan (models/mamba.py math)."""
     dA = jnp.exp(dt[..., None] * a)                          # (B,S,D,N)

@@ -154,8 +154,13 @@ class ServeEngine:
         self.pos[slot] = 0
 
     def run_until_done(self, max_steps: int = 10_000) -> list[Request]:
+        """Drain queue + active slots; returns only the requests retired by
+        *this* call (``self.finished`` keeps the cumulative history — the
+        sibling ``QueryServeEngine`` contract, so repeated drains never
+        re-report earlier completions)."""
+        n0 = len(self.finished)
         steps = 0
         while (self.queue or self.active) and steps < max_steps:
             self.step()
             steps += 1
-        return self.finished
+        return self.finished[n0:]

@@ -14,7 +14,9 @@ step is for tokens.
 A structurally repetitive stream (the FedBench/templated-workload serving
 case) therefore pays per *shape*, not per query, for planning — and on top
 of that, warm steady-state traffic is absorbed by the optimizer's epoch-
-keyed plan cache across steps.
+keyed plan cache across steps.  ``dp_backend='jax'`` routes every shape
+group's DP sweep through the ``repro.kernels.dp_layer`` Pallas kernel
+(plans stay bit-identical; see docs/planner.md "On-device DP sweep").
 """
 from __future__ import annotations
 
@@ -64,9 +66,11 @@ class QueryServeEngine:
 
     def __init__(self, fed: Federation, stats: FederatedStats,
                  max_batch: int = 64, plan_cache_size: int = 1024,
-                 cost_model: CostModel | None = None, engine=None):
+                 cost_model: CostModel | None = None, engine=None,
+                 dp_backend: str = "numpy"):
         self.optimizer = OdysseyOptimizer(stats, cost_model=cost_model,
-                                          plan_cache_size=plan_cache_size)
+                                          plan_cache_size=plan_cache_size,
+                                          dp_backend=dp_backend)
         self.engine = engine if engine is not None else LocalEngine(fed)
         self.max_batch = max_batch
         self.queue: list[QueryRequest] = []
@@ -117,8 +121,13 @@ class QueryServeEngine:
         return admitted
 
     def run_until_done(self, max_steps: int = 10_000) -> "list[QueryRequest]":
+        """Drain the queue; returns only the requests completed by *this*
+        call (the cumulative history stays on ``self.finished`` — returning
+        it here would let a second call re-report, and double-count,
+        requests finished earlier)."""
+        done: "list[QueryRequest]" = []
         steps = 0
         while self.queue and steps < max_steps:
-            self.step()
+            done.extend(self.step())
             steps += 1
-        return self.finished
+        return done

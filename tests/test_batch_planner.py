@@ -9,6 +9,7 @@ import pytest
 from repro.core.batch_planner import BatchPlanReport, pricing_key, shape_key
 from repro.core.decomposition import decompose
 from repro.core.join_order import (
+    DP_BACKENDS,
     dp_join_order,
     dp_join_order_batch,
     star_graph_topology,
@@ -192,7 +193,12 @@ def test_select_sources_batch_matches_single(tiny_fed, tiny_stats,
                 assert np.array_equal(d1[k], d2[k]), (q.name, k)
 
 
-def test_dp_join_order_batch_matches_single(tiny_stats, tiny_workload):
+@pytest.mark.parametrize("dp_backend", DP_BACKENDS)
+def test_dp_join_order_batch_matches_single(tiny_stats, tiny_workload,
+                                            dp_backend):
+    """Shape-group sweeps must be bit-identical (cost, cardinality, leaf
+    order, strategies) to planning each member alone — under the numpy
+    backend and the on-device (Pallas, interpret-mode) jax backend alike."""
     def strategies(t, out):
         out.append((t.kind, t.strategy, tuple(sorted(t.stars)),
                     t.cost, t.cardinality))
@@ -209,11 +215,13 @@ def test_dp_join_order_batch_matches_single(tiny_stats, tiny_workload):
     for (_, distinct), members in groups.items():
         graphs = [g for _, g in members]
         sels = select_sources_batch(graphs, tiny_stats)
-        trees = dp_join_order_batch(graphs, tiny_stats, sels, distinct=distinct)
+        trees = dp_join_order_batch(graphs, tiny_stats, sels, distinct=distinct,
+                                    dp_backend=dp_backend)
         for (q, g), tree in zip(members, trees):
             single = dp_join_order(g, tiny_stats, select_sources(g, tiny_stats),
                                    distinct=distinct)
             assert strategies(single, []) == strategies(tree, []), q.name
+            assert tree.leaf_order() == single.leaf_order(), q.name
             checked += 1
     assert checked == len(tiny_workload)
 
@@ -265,6 +273,25 @@ def test_dp_join_order_batch_rejects_mixed_topology(tiny_stats, tiny_workload):
         dp_join_order_batch(graphs, tiny_stats, sels)
 
 
+def test_optimize_batch_jax_backend_matches_numpy(tiny_fed, tiny_stats,
+                                                  tiny_workload):
+    """The whole batched pipeline on the jax backend: same plans, caching
+    flags and batch report as the numpy-backend optimizer."""
+    batch = _mixed_batch(tiny_fed, tiny_workload, size=24)
+    plans_np = OdysseyOptimizer(tiny_stats).optimize_batch(batch)
+    opt_jax = OdysseyOptimizer(tiny_stats, dp_backend="jax")
+    plans_jx = opt_jax.optimize_batch(batch)
+    for q, a, b in zip(batch, plans_np, plans_jx):
+        assert _plan_fingerprint(a) == _plan_fingerprint(b), q.name
+        assert a.cached == b.cached, q.name
+    assert opt_jax.last_batch_report.n_planned > 0
+
+
+def test_optimizer_rejects_unknown_dp_backend(tiny_stats):
+    with pytest.raises(ValueError, match="dp_backend"):
+        OdysseyOptimizer(tiny_stats, dp_backend="cuda")
+
+
 # -- the batched serving surface ---------------------------------------------
 
 def test_query_serve_engine_batches_and_answers(tiny_fed, tiny_stats,
@@ -292,3 +319,46 @@ def test_query_serve_engine_batches_and_answers(tiny_fed, tiny_stats,
     eng.run_until_done()
     assert eng.serve_stats.n_served == served + len(tiny_workload)
     assert eng.serve_stats.n_planned == eng.optimizer.plan_cache.misses
+
+
+def test_query_serve_run_until_done_reports_only_new(tiny_fed, tiny_stats,
+                                                     tiny_workload):
+    """Regression: ``run_until_done`` used to return the cumulative
+    ``finished`` list, so a second drain re-reported (and double-counted)
+    requests completed by earlier calls."""
+    from repro.serve.query import QueryServeEngine
+
+    fed, _ = tiny_fed
+    eng = QueryServeEngine(fed, tiny_stats, max_batch=4)
+    for q in tiny_workload:
+        eng.submit(q)
+    first = eng.run_until_done()
+    assert len(first) == len(tiny_workload)
+    assert eng.run_until_done() == []          # drained: nothing new
+    req = eng.submit(tiny_workload[0])
+    second = eng.run_until_done()
+    assert [r.qid for r in second] == [req.qid], \
+        "second drain must report only the newly completed request"
+    # the cumulative history is still available on the attribute
+    assert len(eng.finished) == len(tiny_workload) + 1
+
+
+def test_query_serve_engine_jax_backend(tiny_fed, tiny_stats, tiny_workload):
+    """The serve path plans whole shape groups on-device: a jax-backend
+    engine must serve the same answers as the numpy one."""
+    from repro.serve.query import QueryServeEngine
+
+    fed, _ = tiny_fed
+    eng = QueryServeEngine(fed, tiny_stats, max_batch=8, dp_backend="jax")
+    assert eng.optimizer.dp_backend == "jax"
+    wave = [q for q in tiny_workload if len(q.patterns) >= 2][:4]
+    for q in wave:
+        eng.submit(q)
+    done = eng.run_until_done()
+    assert len(done) == len(wave)
+    for req in done:
+        want = naive_evaluate(fed, req.query)
+        proj = req.query.effective_projection()
+        n = len(next(iter(req.rows.values()))) if req.rows else 0
+        got = set(zip(*[req.rows[v].tolist() for v in proj])) if n else set()
+        assert got == want, req.query.name

@@ -18,11 +18,11 @@ def _tree_shape(t):
     return ("join", t.strategy, _tree_shape(t.left), _tree_shape(t.right))
 
 
-def _assert_equivalent(q, stats):
+def _assert_equivalent(q, stats, dp_backend="numpy"):
     graph = decompose(q)
     sel = select_sources(graph, stats)
     cm = CostModel()
-    new = dp_join_order(graph, stats, sel, cm, q.distinct)
+    new = dp_join_order(graph, stats, sel, cm, q.distinct, dp_backend=dp_backend)
     ref = dp_join_order_ref(graph, stats, sel, cm, q.distinct)
     assert new.leaf_order() == ref.leaf_order(), q.name
     assert _tree_shape(new) == _tree_shape(ref), q.name
@@ -158,13 +158,15 @@ def test_rel_submasks_match_reference_enumeration_order():
         assert _rel_submasks(s).tolist() == want, f"s={s}"
 
 
-def _assert_shaped_equivalent(shape, n_stars, seed, block_bytes=None):
+def _assert_shaped_equivalent(shape, n_stars, seed, block_bytes=None,
+                              dp_backend="numpy"):
     from repro.rdf.shapes import shaped_planning_inputs
 
     graph, stats, sel, q = shaped_planning_inputs(shape, n_stars, seed)
     assert len(graph.stars) == n_stars
     cm = CostModel()
-    new = dp_join_order(graph, stats, sel, cm, q.distinct, block_bytes=block_bytes)
+    new = dp_join_order(graph, stats, sel, cm, q.distinct, block_bytes=block_bytes,
+                        dp_backend=dp_backend)
     ref = dp_join_order_ref(graph, stats, sel, cm, q.distinct)
     assert new.leaf_order() == ref.leaf_order(), (shape, n_stars)
     assert _tree_shape(new) == _tree_shape(ref), (shape, n_stars)
@@ -194,6 +196,126 @@ def test_chunked_tiles_identical_plans():
     tie-breaking) of the single-tile run and of the reference."""
     for shape, n_stars, seed in (("clique", 9, 7), ("chain", 12, 7), ("tree", 10, 7)):
         _assert_shaped_equivalent(shape, n_stars, seed, block_bytes=2048)
+
+
+def test_min_tile_width_wide_member_batch_tiny_budget():
+    """Regression: ``block_bytes // (_PAIR_BYTES * B)`` used to degenerate to
+    1-pair tiles for wide member batches under a small budget, turning the
+    sweep into a Python-level per-pair loop.  A 256-member batch under a tiny
+    ``block_bytes`` must now split the member axis instead (MIN_TILE_ELEMS
+    floor), plan in bounded time, and return exactly the plans of the
+    default-budget sweep."""
+    import time
+
+    from repro.core.join_order import (
+        MIN_TILE_ELEMS,
+        _PAIR_BYTES,
+        dp_join_order_batch,
+    )
+    from repro.rdf.shapes import shaped_planning_inputs
+
+    graph, stats, sel, q = shaped_planning_inputs("clique", 8, seed=3)
+    cm = CostModel()
+    base = dp_join_order(graph, stats, sel, cm, q.distinct)   # warm memos too
+    B = 256
+    block_bytes = 4096
+    assert block_bytes // (_PAIR_BYTES * B) < MIN_TILE_ELEMS  # floor engages
+    t0 = time.perf_counter()
+    trees = dp_join_order_batch([graph] * B, stats, [sel] * B, cm, q.distinct,
+                                block_bytes=block_bytes)
+    elapsed = time.perf_counter() - t0
+    assert elapsed < 30.0, f"tiny-budget 256-member sweep took {elapsed:.1f}s"
+    assert len(trees) == B
+    for t in trees:
+        assert _tree_shape(t) == _tree_shape(base)
+        assert t.leaf_order() == base.leaf_order()
+        assert t.cost == base.cost and t.cardinality == base.cardinality
+
+
+def test_weighted_cost_model_with_source_less_stars():
+    """Regression: ``CostModel.src_w`` used to raise ``max() arg is an empty
+    sequence`` (killing both DP implementations at leaf seeding) whenever
+    ``source_weight`` was configured and any star's selection was pruned to
+    zero sources.  Empty selections must weigh 1.0 and plan normally."""
+    from repro.rdf.shapes import shaped_planning_inputs
+
+    graph, stats, sel, q = shaped_planning_inputs("clique", 7, seed=9)
+    assert any(not s for s in sel.star_sources)       # the trigger
+    cm = CostModel(source_weight={0: 2.0, 3: 0.5})
+    assert cm.src_w([]) == 1.0
+    new = dp_join_order(graph, stats, sel, cm, q.distinct)
+    ref = dp_join_order_ref(graph, stats, sel, cm, q.distinct)
+    assert new.leaf_order() == ref.leaf_order()
+    assert _tree_shape(new) == _tree_shape(ref)
+    np.testing.assert_allclose(new.cost, ref.cost, rtol=1e-9, atol=1e-12)
+
+
+# -- dp_backend='jax': the on-device layer sweep ------------------------------
+
+from repro.core.join_order import DP_BACKENDS  # noqa: E402 — every backend
+# added there is automatically covered by the parametrized differentials
+
+
+def test_dp_backend_rejects_unknown(small_stats, workload):
+    graph = decompose(workload[0])
+    sel = select_sources(graph, small_stats)
+    with pytest.raises(ValueError, match="dp_backend"):
+        dp_join_order(graph, small_stats, sel, dp_backend="tpu")
+
+
+@pytest.mark.parametrize("dp_backend", DP_BACKENDS)
+def test_backend_differential_workload_sample(small_stats, workload, dp_backend):
+    """Both backends must return the reference oracle's exact plan on real
+    workload queries (the jax path runs the Pallas kernel, interpret mode)."""
+    multi = [q for q in workload if len(decompose(q).stars) >= 2]
+    assert len(multi) >= 4
+    for q in multi[:4]:
+        _assert_equivalent(q, small_stats, dp_backend=dp_backend)
+
+
+@pytest.mark.parametrize("dp_backend", DP_BACKENDS)
+@pytest.mark.parametrize("shape,n_stars", [("chain", 6), ("tree", 7),
+                                           ("clique", 6)])
+def test_backend_differential_shapes(shape, n_stars, dp_backend):
+    _assert_shaped_equivalent(shape, n_stars, seed=13, dp_backend=dp_backend)
+
+
+def test_jax_backend_chain12_differential():
+    """Acceptance: the jax backend matches the reference bit-for-bit at the
+    12-star chain size (the tree/clique 12-star cases run in the slow tier)."""
+    _assert_shaped_equivalent("chain", 12, seed=5, dp_backend="jax")
+
+
+@pytest.mark.slow
+def test_jax_backend_n12_tree_clique_differential():
+    _assert_shaped_equivalent("tree", 12, seed=17, dp_backend="jax")
+    _assert_shaped_equivalent("clique", 12, seed=7, dp_backend="jax")
+
+
+def test_jax_backend_tiled_identical_plans():
+    """A small block budget forces multi-tile layers through the kernel; the
+    cross-tile strictly-less merge must preserve the exact plan."""
+    _assert_shaped_equivalent("clique", 9, seed=7, block_bytes=2048 * 160,
+                              dp_backend="jax")
+
+
+@pytest.mark.parametrize("dp_backend", DP_BACKENDS)
+def test_backend_batch_b8_bit_identical(dp_backend):
+    """B >= 8 member-stacked sweep: every member's tree must be bit-identical
+    (cost, cardinality, leaf order, strategies, sources) to the single-member
+    plan, under either backend."""
+    from repro.core.join_order import dp_join_order_batch
+    from repro.rdf.shapes import shaped_planning_inputs
+
+    graph, stats, sel, q = shaped_planning_inputs("tree", 8, seed=41)
+    cm = CostModel()
+    single = dp_join_order(graph, stats, sel, cm, q.distinct)
+    trees = dp_join_order_batch([graph] * 8, stats, [sel] * 8, cm, q.distinct,
+                                dp_backend=dp_backend)
+    for t in trees:
+        assert _tree_shape(t) == _tree_shape(single)
+        assert t.leaf_order() == single.leaf_order()
+        assert t.cost == single.cost and t.cardinality == single.cardinality
 
 
 def test_18_star_chain_plans_through_bitmask_path():

@@ -123,6 +123,86 @@ def test_signature_overlap_matches_summaries(small_fed):
     np.testing.assert_array_equal(pop > 0, want)
 
 
+@pytest.mark.parametrize("B,R,C", [(1, 2, 3), (4, 130, 7), (8, 260, 140)])
+def test_dp_layer_sweep(B, R, C):
+    """dp_layer (interpret mode) vs the jnp oracle: dense candidate pricing
+    plus the per-column first-strict-minimum — exact equality, including on
+    injected cost ties (the DP's tie-breaking contract) and all-invalid
+    columns."""
+    from jax.experimental import enable_x64
+
+    from repro.kernels.dp_layer import dp_layer
+
+    rng = np.random.default_rng(B * 1000 + R + C)
+    cost_a = rng.uniform(1, 100, (B, R, C))
+    cost_b = rng.uniform(1, 100, (B, R, C))
+    card_a = rng.uniform(0, 50, (B, R, C))
+    n_src_b = rng.integers(1, 4, (B, R, C)).astype(np.float64)
+    src_w_b = rng.uniform(0.5, 2, (B, R, C))
+    bindable = rng.random((B, R, C)) < 0.5
+    valid = rng.random((R, C)) < 0.6
+    if C > 1:
+        valid[:, -1] = False                    # an all-invalid column
+    card_s = rng.uniform(0, 80, (B, C))
+    cost_a[:, ::3, :] = 5.0                     # exact ties across rows
+    cost_b[:, ::3, :] = 5.0
+    params = (1.0, 1.0, 5.0, 20)
+    got = dp_layer(cost_a, cost_b, card_a, n_src_b, src_w_b, bindable, valid,
+                   card_s, params)
+    with enable_x64():
+        want = ref.dp_layer_ref(
+            jnp.asarray(cost_a), jnp.asarray(cost_b), jnp.asarray(card_a),
+            jnp.asarray(n_src_b), jnp.asarray(src_w_b), jnp.asarray(bindable),
+            jnp.asarray(valid), jnp.asarray(card_s), params)
+    np.testing.assert_array_equal(got[0], np.asarray(want[0]))
+    np.testing.assert_array_equal(got[1], np.asarray(want[1]))
+    np.testing.assert_array_equal(got[2], np.asarray(want[2]))
+    if C > 1:                                   # no valid pair -> inf / BIG
+        assert np.isinf(got[0][:, -1]).all()
+
+
+def test_cost_jnp_twins_bitwise_equal_numpy_forms():
+    """Every ``CostModel.*_jnp`` twin must reproduce its ``*_v`` numpy form
+    bit for bit under x64 — the contract the on-device sweep's bit-identical
+    plans rest on (``hash_join_cost_jnp`` runs inside the kernel; the others
+    are pinned here so they cannot silently drift)."""
+    from jax.experimental import enable_x64
+
+    from repro.core.cost import CostModel
+
+    rng = np.random.default_rng(23)
+    cm = CostModel(intermediate_weight=1.25, transfer_weight=0.75,
+                   request_cost=5.0, bind_batch=20)
+    card = rng.uniform(0, 1e4, 257)
+    card_l = rng.uniform(0, 1e3, 257)
+    n_src = rng.integers(1, 6, 257).astype(np.float64)
+    src_w = rng.uniform(0.25, 4.0, 257)
+    bindable = rng.random(257) < 0.5
+    with enable_x64():
+        pairs = [
+            (cm.leaf_cost_v(card, n_src, src_w),
+             cm.leaf_cost_jnp(jnp.asarray(card), jnp.asarray(n_src),
+                              jnp.asarray(src_w))),
+            (cm.hash_join_cost_v(card),
+             cm.hash_join_cost_jnp(jnp.asarray(card))),
+            (cm.bind_join_cost_v(card_l, card, n_src, src_w),
+             cm.bind_join_cost_jnp(jnp.asarray(card_l), jnp.asarray(card),
+                                   jnp.asarray(n_src), jnp.asarray(src_w))),
+        ]
+        for want, got in pairs:
+            assert np.asarray(got).dtype == np.float64
+            np.testing.assert_array_equal(np.asarray(got), want)
+        hj = cm.hash_join_cost_v(card)
+        want_c, want_b = cm.join_candidates_v(card_l, card_l[::-1], card, hj,
+                                              card_l, n_src, src_w, bindable)
+        got_c, got_b = cm.join_candidates_jnp(
+            jnp.asarray(card_l), jnp.asarray(card_l[::-1]), jnp.asarray(card),
+            jnp.asarray(hj), jnp.asarray(card_l), jnp.asarray(n_src),
+            jnp.asarray(src_w), jnp.asarray(bindable))
+        np.testing.assert_array_equal(np.asarray(got_c), want_c)
+        np.testing.assert_array_equal(np.asarray(got_b), want_b)
+
+
 def test_popcount_identity():
     rng = np.random.default_rng(11)
     v = jnp.asarray(rng.integers(-(2**31), 2**31 - 1, 4096, dtype=np.int64).astype(np.int32))

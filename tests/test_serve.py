@@ -121,6 +121,20 @@ def test_serve_retired_slot_resets_pos(small_lm):
     assert (eng.pos == 0).all()
 
 
+def test_serve_run_until_done_reports_only_new(small_lm):
+    """Same drain contract as ``QueryServeEngine``: each ``run_until_done``
+    call reports only the requests it retired, never earlier completions."""
+    cfg, params = small_lm
+    eng = ServeEngine(cfg, params, n_slots=2, ctx_len=64)
+    eng.submit(Request(rid=0, prompt=[5, 9], max_new=3))
+    first = eng.run_until_done()
+    assert [r.rid for r in first] == [0]
+    assert eng.run_until_done() == []
+    eng.submit(Request(rid=1, prompt=[7], max_new=3))
+    assert [r.rid for r in eng.run_until_done()] == [1]
+    assert [r.rid for r in eng.finished] == [0, 1]
+
+
 def test_serve_rejects_prompt_longer_than_ctx(small_lm):
     """Regression: a prompt >= ctx_len used to be admitted and run `pos` off
     the slot cache grid; it must be rejected at submit."""
