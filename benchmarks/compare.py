@@ -12,6 +12,12 @@ stay above ``baseline * (1 - tolerance)``; for lower-is-better metrics
 machine-portable ratios plus memory, so the gate is stable across runner
 generations while still catching real regressions.
 
+A baseline entry may additionally carry a ``hard_floor`` (higher-is-better)
+or ``hard_ceil`` (lower-is-better): an absolute bound that the tolerance
+never relaxes.  The effective bound is the *stricter* of the two — e.g.
+``dp_sweep_jax_vs_numpy_x`` has ``hard_floor: 1.0``, so the jax DP backend
+dropping to slower-than-numpy fails the gate no matter the tolerance.
+
 Exit status: 0 == within tolerance, 1 == regression (or missing metric),
 2 == usage/file error.  New metrics present only in the current run are
 reported informationally — commit a refreshed baseline to start guarding
@@ -46,10 +52,14 @@ def compare(current: dict, baseline: dict, tolerance: float) -> tuple[list[str],
         cur_v = float(cur["value"])
         if higher:
             floor = base_v * (1.0 - tolerance)
+            if "hard_floor" in base:
+                floor = max(floor, float(base["hard_floor"]))
             ok = cur_v >= floor
             bound = f">= {floor:.3g}"
         else:
             ceil = base_v * (1.0 + tolerance)
+            if "hard_ceil" in base:
+                ceil = min(ceil, float(base["hard_ceil"]))
             ok = cur_v <= ceil
             bound = f"<= {ceil:.3g}"
         arrow = "higher" if higher else "lower"

@@ -48,7 +48,8 @@ import time
 from dataclasses import dataclass
 
 from repro.core.decomposition import StarGraph, decompose
-from repro.core.join_order import dp_join_order_batch, star_graph_topology
+from repro.core.join_order import (DP_SWEEP_COUNTERS, dp_join_order_batch,
+                                   star_graph_topology)
 from repro.core.source_selection import (
     SelectionMemo,
     select_sources_batch,
@@ -69,6 +70,8 @@ class BatchPlanReport:
     n_shapes: int = 0            # distinct shape groups among planned queries
     n_priced: int = 0            # distinct pricing keys (DP members actually swept)
     n_selections: int = 0        # distinct selection fixpoints actually run
+    dp_resident: int = 0         # sweeps run as one resident device program
+    dp_tiled: int = 0            # jax sweeps that fell back to per-layer tiles
     stats_epoch: int = 0         # the single epoch snapshot
     total_ms: float = 0.0
 
@@ -116,6 +119,7 @@ def plan_batch(optimizer, queries: "list[BGPQuery]"):
     epoch = optimizer.stats_epoch          # the one and only epoch read
     cache = optimizer.plan_cache
     report = BatchPlanReport(n_queries=len(queries), stats_epoch=epoch)
+    dp_ctr0 = (DP_SWEEP_COUNTERS["resident"], DP_SWEEP_COUNTERS["tiled"])
     plans: "list[PhysicalPlan | None]" = [None] * len(queries)
 
     # -- cache hits + exact-signature dedupe --------------------------------
@@ -227,6 +231,8 @@ def plan_batch(optimizer, queries: "list[BGPQuery]"):
         plans[i] = plan
         report.duplicates += 1
 
+    report.dp_resident = DP_SWEEP_COUNTERS["resident"] - dp_ctr0[0]
+    report.dp_tiled = DP_SWEEP_COUNTERS["tiled"] - dp_ctr0[1]
     report.total_ms = (time.perf_counter() - t_start) * 1e3
     optimizer.last_batch_report = report
     return plans

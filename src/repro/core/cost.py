@@ -130,3 +130,27 @@ class CostModel:
         bc = cost_a + self.bind_join_cost_jnp(card_a, card_out, n_src_b, src_w_b)
         is_bind = bindable_b & (bc < hc)
         return jnp.where(is_bind, bc, hc), is_bind
+
+    @staticmethod
+    def join_candidates_params_jnp(params, cost_a, cost_b, card_out,
+                                   card_a, n_src_b, src_w_b, bindable_b):
+        """The fused form of ``join_candidates_jnp`` used by the on-device
+        sweep programs: the cost-model parameters arrive as a traced ``(4,)``
+        array ``(intermediate_weight, transfer_weight, request_cost,
+        bind_batch)`` instead of python closure constants, so one compiled
+        program serves every ``CostModel`` — a parameter sweep never
+        retraces.  The hash-join term is derived from ``card_out`` in place
+        (``iw * card_out``, the same single multiply as
+        ``hash_join_cost_v``), and every addition/multiplication associates
+        exactly as in the scalar/``*_v`` forms, so costs stay bit-identical
+        to the numpy path under x64."""
+        import jax.numpy as jnp
+
+        iw, tw, rc, bb = params[0], params[1], params[2], params[3]
+        hc = cost_a + cost_b
+        hc = hc + iw * card_out
+        n_req = jnp.maximum(1.0, card_a / bb) * n_src_b
+        bc = cost_a + ((rc * n_req + tw * card_out * src_w_b)
+                       + iw * card_out)
+        is_bind = bindable_b & (bc < hc)
+        return jnp.where(is_bind, bc, hc), is_bind

@@ -33,12 +33,15 @@ Two DP implementations share the same plan space and cost model:
                        each member alone.  Both forms take
                        ``dp_backend='numpy'|'jax'``: the numpy backend runs
                        the tiled layer sweep in-process; the jax backend
-                       prices each layer tile through the Pallas kernel
-                       ``repro.kernels.dp_layer`` (grid over member ×
-                       column-tile × row-tile, float64, ``interpret=True``
-                       on CPU) with identical enumeration order and
-                       first-strict-minimum tie-breaking, so the two
-                       backends return bit-identical plans.
+                       runs the whole sweep as one device-resident XLA
+                       program (``repro.kernels.dp_layer.dp_sweep_resident``
+                       — host enumerates the topology's layer schedule once,
+                       the DP state stays on device across layers) whenever
+                       the schedule fits the tile budget, falling back to
+                       the per-layer Pallas kernel otherwise, with identical
+                       enumeration order and first-strict-minimum
+                       tie-breaking, so the two backends return
+                       bit-identical plans.
 ``dp_join_order_ref``  the original frozenset/`itertools.combinations`
                        formulation with unmemoized statistics, kept as the
                        reference oracle — tests assert the bitmask DP returns
@@ -51,6 +54,8 @@ plan even when several plans share the optimal cost.
 """
 from __future__ import annotations
 
+import contextlib
+from collections import OrderedDict
 from dataclasses import dataclass
 from itertools import combinations
 
@@ -267,6 +272,23 @@ DP_BACKENDS = ("numpy", "jax")
 
 _STRAT_SINGLE, _STRAT_EXCL, _STRAT_HASH, _STRAT_BIND = 1, 2, 3, 4
 
+# Observability for the jax backend's two execution modes: 'resident' == the
+# whole sweep ran as one compiled device program (kernels.dp_layer.
+# dp_sweep_resident), 'tiled' == it fell back to per-layer-tile kernel calls
+# (schedule too large for the memory budget, or n too big for int32 masks).
+DP_SWEEP_COUNTERS = {"resident": 0, "tiled": 0,
+                     "schedule_builds": 0, "schedule_hits": 0}
+
+# Resident sweeps ship int32 mask indices; past this star count the dense
+# 2^n state wouldn't fit a sane budget anyway (the roadmap's hash-indexed
+# connected-subsets table is the real fix for 22+ stars).
+_RESIDENT_MAX_STARS = 20
+
+# Rough bytes of live device state per scheduled candidate pair during one
+# scan step of the resident program (the ~10 concurrent (B, P) float64
+# gather/pricing arrays), used for the budget eligibility check.
+_RESIDENT_PAIR_BYTES = 88
+
 # Proper nonempty submasks of an s-element set, *relative* to the set's bit
 # positions (bit j == j-th smallest member), in the reference enumeration
 # order: popcount ascending, combination-lex within a popcount.  Lex order on
@@ -360,6 +382,168 @@ def star_graph_topology(graph: StarGraph) -> tuple:
             tuple((e.src, e.dst, e.pred, e.generic) for e in graph.edges))
 
 
+# -- resident-sweep layer schedule -------------------------------------------
+
+@dataclass
+class _DPSchedule:
+    """The member-independent layer schedule of one graph topology, flattened
+    for the resident device program: per popcount layer, the connected
+    subsets (``layer_cols``) and the flat (submask A, complement B) candidate
+    pairs in the reference enumeration order — column-major over the layer's
+    connected subsets, relative submasks ascending within a column
+    (``pair_seg`` is the pair's column position; sentinel values mark
+    padding).  Extents are padded to shared power-of-two buckets so nearby
+    topologies reuse one compiled program."""
+
+    n: int
+    pair_a: np.ndarray          # (L, P) int32, sentinel-padded with 0
+    pair_b: np.ndarray          # (L, P) int32
+    pair_seg: np.ndarray        # (L, P) int32, sentinel == C (padded extent)
+    layer_cols: np.ndarray      # (L, C) int32, sentinel == 2**n
+    n_pairs: int
+    nbytes: int
+    dev: "tuple | None" = None  # lazily cached device copies of the four
+                                # index arrays (uploaded once per topology,
+                                # not once per sweep)
+
+
+_SCHEDULE_CACHE: "OrderedDict[tuple, _DPSchedule | None]" = OrderedDict()
+_SCHEDULE_CACHE_MAX_ENTRIES = 32
+_SCHEDULE_CACHE_MAX_BYTES = 256 * 1024 * 1024
+
+
+def _pow2_bucket(v: int, lo: int = 8) -> int:
+    p = lo
+    while p < v:
+        p *= 2
+    return p
+
+
+def _dp_schedule(graph: StarGraph, budget: int, B: int) -> "_DPSchedule | None":
+    """Build (or fetch) the flat layer schedule for ``graph``'s topology.
+
+    Returns ``None`` when the resident program would not fit the tile-memory
+    budget for this member count — the caller falls back to the tiled
+    per-layer path.  The eligibility bound is computed from connectivity
+    alone (``n_cols * (2^s - 2)`` pairs per layer) *before* the O(pairs)
+    enumeration, so an oversized clique never pays the build either."""
+    n = len(graph.stars)
+    if n > _RESIDENT_MAX_STARS:
+        return None
+    key = star_graph_topology(graph)
+    sched = _SCHEDULE_CACHE.get(key)
+    if sched is not None:
+        DP_SWEEP_COUNTERS["schedule_hits"] += 1
+        _SCHEDULE_CACHE.move_to_end(key)
+        return sched
+
+    size = 1 << n
+    masks = np.arange(size, dtype=np.int64)
+    pop = np.zeros(size, np.int64)
+    for i in range(n):
+        pop += (masks >> i) & 1
+    adj = np.zeros(n, np.int64)
+    for e in graph.edges:
+        adj[e.src] |= np.int64(1) << e.dst
+        adj[e.dst] |= np.int64(1) << e.src
+    conn = np.zeros(size, bool)
+    for i in range(n):
+        conn[1 << i] = True
+
+    layer_cols_raw: list[np.ndarray] = []
+    for s in range(2, n + 1):
+        S_all = masks[pop == s]
+        conn_s = np.zeros(len(S_all), bool)
+        for i in range(n):
+            bit = np.int64(1) << i
+            has = (S_all & bit) != 0
+            Si = S_all[has]
+            conn_s[has] |= conn[Si ^ bit] & ((adj[i] & Si) != 0)
+        conn[S_all] = conn_s
+        layer_cols_raw.append(S_all[conn_s])
+
+    # budget gate from connectivity alone (upper bound: every submask pair
+    # of every connected subset survives).  An oversized topology is NOT
+    # cached — eligibility depends on the caller's member count and budget,
+    # and a smaller batch may still fit later.
+    p_bound = max((len(c) * ((1 << (s + 2)) - 2)
+                   for s, c in enumerate(layer_cols_raw)), default=0)
+    if _pow2_bucket(p_bound) * B * _RESIDENT_PAIR_BYTES > budget:
+        return None
+    else:
+        DP_SWEEP_COUNTERS["schedule_builds"] += 1
+        flat_per_layer: list[tuple[np.ndarray, np.ndarray, np.ndarray]] = []
+        p_max = c_max = n_pairs = 0
+        row_chunk = max(1, (budget // 32) // max(1, max(
+            (len(c) for c in layer_cols_raw), default=1)))
+        for s_i, cols in enumerate(layer_cols_raw):
+            s = s_i + 2
+            if len(cols) == 0:
+                flat_per_layer.append((np.empty(0, np.int64),) * 3)
+                continue
+            idx = np.nonzero(((cols[:, None] >> np.arange(n, dtype=np.int64))
+                              & 1) == 1)[1].reshape(len(cols), s)
+            pw = np.int64(1) << idx
+            rel = _rel_submasks(s)
+            fa, fb, fs = [], [], []
+            for r0 in range(0, len(rel), row_chunk):
+                relb = rel[r0:r0 + row_chunk]
+                A = np.zeros((len(relb), len(cols)), np.int64)
+                for j in range(s):
+                    A += ((relb >> j) & 1)[:, None] * pw[:, j][None, :]
+                Bm = cols[None, :] ^ A
+                valid = conn[A] & conn[Bm]
+                ci, ri = np.nonzero(valid.T)   # col-major: rows asc per col
+                fa.append(A[ri, ci])
+                fb.append(Bm[ri, ci])
+                fs.append(ci)
+            a = np.concatenate(fa)
+            flat_per_layer.append((a, np.concatenate(fb), np.concatenate(fs)))
+            n_pairs += len(a)
+            p_max = max(p_max, len(a))
+            c_max = max(c_max, len(cols))
+
+        L = n - 1
+        P = _pow2_bucket(p_max)
+        C = _pow2_bucket(c_max)
+        pair_a = np.zeros((L, P), np.int32)
+        pair_b = np.zeros((L, P), np.int32)
+        pair_seg = np.full((L, P), C, np.int32)        # sentinel == C
+        layer_cols = np.full((L, C), size, np.int32)   # sentinel == size
+        for li, ((a, b, seg), cols) in enumerate(
+                zip(flat_per_layer, layer_cols_raw)):
+            pair_a[li, :len(a)] = a
+            pair_b[li, :len(a)] = b
+            pair_seg[li, :len(a)] = seg
+            layer_cols[li, :len(cols)] = cols
+        nbytes = (pair_a.nbytes + pair_b.nbytes + pair_seg.nbytes
+                  + layer_cols.nbytes)
+        sched = _DPSchedule(n, pair_a, pair_b, pair_seg, layer_cols,
+                            n_pairs, nbytes)
+
+    _SCHEDULE_CACHE[key] = sched
+    total = sum(s.nbytes for s in _SCHEDULE_CACHE.values())
+    while _SCHEDULE_CACHE and (
+            len(_SCHEDULE_CACHE) > _SCHEDULE_CACHE_MAX_ENTRIES
+            or total > _SCHEDULE_CACHE_MAX_BYTES):
+        _, old = _SCHEDULE_CACHE.popitem(last=False)
+        total -= old.nbytes
+    return sched
+
+
+def _resident_fits(sched: "_DPSchedule | None", B: int, budget: int) -> bool:
+    """Device-memory eligibility of the resident program: the scan step's
+    live (B, P) pricing state, the (B, 2^n) resident DP state (6 float64
+    planes plus the int32 winner planes) and the schedule itself must fit
+    the layer-tile budget."""
+    if sched is None:
+        return False
+    size = 1 << sched.n
+    state = B * size * 8 * 6 + B * size * 4 * 2
+    step = B * sched.pair_a.shape[1] * _RESIDENT_PAIR_BYTES
+    return state + step + sched.nbytes <= budget
+
+
 def _subset_cardinalities_b(graph: StarGraph, star_card: np.ndarray,
                             edge_sel: np.ndarray, masks: np.ndarray) -> np.ndarray:
     """Member-batched ``_subset_cardinalities``: ``star_card``/``edge_sel``
@@ -420,9 +604,10 @@ def dp_join_order(
 
     Implemented as the single-member case of ``_dp_sweep`` — the same sweep
     ``dp_join_order_batch`` runs over a whole shape group at once.
-    ``dp_backend='jax'`` prices the layer tiles through the Pallas kernel
-    (``repro.kernels.dp_layer``) instead of the in-process numpy ops; plans
-    are bit-identical across backends."""
+    ``dp_backend='jax'`` runs the whole sweep as one device-resident program
+    (``repro.kernels.dp_layer.dp_sweep_resident``) when the topology's layer
+    schedule fits the tile budget, and prices per-layer tiles through the
+    Pallas kernel otherwise; plans are bit-identical across backends."""
     cm = cost_model or CostModel()
     star_card, edge_sel = _star_edge_statistics(graph, stats, sel, distinct)
     return _dp_sweep(graph, [sel], [star_card], [edge_sel], cm, block_bytes,
@@ -484,12 +669,15 @@ def _dp_sweep(
     block_bytes: int | None = None,
     dp_backend: str = "numpy",
 ) -> "list[JoinTree]":
-    """The tiled csg/cmp sweep over ``B = len(sels)`` members sharing one
-    graph topology.  Mask enumeration, connectivity and tile layout are
+    """The csg/cmp sweep over ``B = len(sels)`` members sharing one graph
+    topology.  Mask enumeration, connectivity and tile layout are
     member-independent; every numeric array carries a leading member axis.
-    ``dp_backend`` selects who prices the layer tiles: ``'numpy'`` (the
-    in-process array ops) or ``'jax'`` (the ``repro.kernels.dp_layer``
-    Pallas kernel); both produce bit-identical plans."""
+    ``dp_backend`` selects the sweep engine: ``'numpy'`` runs the in-process
+    tiled layer loop; ``'jax'`` runs the whole sweep as one device-resident
+    program when the topology's layer schedule fits the budget
+    (``_resident_sweep``) and falls back to pricing the layer tiles through
+    the ``repro.kernels.dp_layer`` Pallas kernel when it doesn't.  All
+    paths produce bit-identical plans."""
     if dp_backend not in DP_BACKENDS:
         raise ValueError(f"unknown dp_backend {dp_backend!r} "
                          f"(expected one of {DP_BACKENDS})")
@@ -567,15 +755,6 @@ def _dp_sweep(
             src_w[b, m] = cm.src_w(srcs)
             strat[b, m] = STRAT_SINGLE
 
-    # small-star fast path: dense per-layer structures cached across calls,
-    # taken whenever the whole dense layer set (< 3^n pairs) fits the budget
-    skel = (_layer_skeletons(n)
-            if n <= _SKEL_CACHE_MAX_N and tile_elems >= 3 ** n else None)
-    if skel is None:
-        pop = np.zeros(size, np.int64)
-        for i in range(n):
-            pop += (masks >> i) & 1
-
     any_single = bool(single_mask.any())
     # per-source weight lookup for the exclusive-group seed: one interpreted
     # cm.src_w call per source id instead of one per (member, column) tile
@@ -585,6 +764,101 @@ def _dp_sweep(
     if cm.source_weight:
         hi = int(single_src.max()) + 1 if single_src.size else 0
         w_lut = np.array([cm.src_w([s]) for s in range(hi)] + [1.0])
+
+    # jax backend: run the whole sweep as one compiled device program when
+    # the topology's layer schedule fits the budget — the full DP state
+    # stays resident on device across layers, only int32 index tiles plus
+    # the seed state go up and the final plan state comes down (one
+    # host<->device round trip for the whole sweep).  Oversized schedules
+    # fall back to the tiled per-layer kernel path, with x64 entered once
+    # around the whole sweep instead of per layer tile.
+    resident = False
+    if dp_backend == "jax":
+        sched = _dp_schedule(graph, budget, B)
+        if _resident_fits(sched, B, budget):
+            _resident_sweep(sched, cm, card, cost, bindable, n_src, src_w,
+                            strat, split, excl_of, single_mask, single_src,
+                            w_lut)
+            resident = True
+            DP_SWEEP_COUNTERS["resident"] += 1
+        else:
+            DP_SWEEP_COUNTERS["tiled"] += 1
+    if not resident:
+        ctx = contextlib.nullcontext()
+        if dp_backend == "jax":
+            from jax.experimental import enable_x64
+            ctx = enable_x64()
+        with ctx:
+            _tiled_layer_sweep(cm, dp_backend, n, B, tile_elems, masks, adj,
+                               conn, card, cost, bindable, n_src, src_w,
+                               strat, split, excl_of, single_mask,
+                               single_src, any_single, w_lut)
+
+    def build(b: int, m: int) -> JoinTree:
+        ss = frozenset(i for i in range(n) if (m >> i) & 1)
+        st = int(strat[b, m])
+        if st == STRAT_SINGLE:
+            i = next(iter(ss))
+            return JoinTree("leaf", ss, star_cards[b][i], float(cost[b, m]),
+                            sources=list(sels[b].star_sources[i]))
+        if st == STRAT_EXCL:
+            return JoinTree("leaf", ss, float(card[b, m]), float(cost[b, m]),
+                            sources=[int(excl_of[b, m])])
+        am = int(split[b, m])
+        return JoinTree("join", ss, float(card[b, m]), float(cost[b, m]),
+                        build(b, am), build(b, m ^ am),
+                        "hash" if st == STRAT_HASH else "bind")
+
+    full = size - 1
+    comps = None
+    out: list[JoinTree] = []
+    for b in range(B):
+        if np.isfinite(cost[b, full]):
+            out.append(build(b, full))
+            continue
+        # disconnected query: cartesian-combine components by ascending
+        # cardinality (component masks are member-independent)
+        if comps is None:
+            comps = _components(graph)
+        trees = sorted((build(b, sum(1 << i for i in c)) for c in comps),
+                       key=lambda t: t.cardinality)
+        tree = trees[0]
+        for t in trees[1:]:
+            cardx = tree.cardinality * t.cardinality
+            tree = JoinTree("join", tree.stars | t.stars, cardx,
+                            tree.cost + t.cost + cm.intermediate_weight * cardx,
+                            tree, t, "hash", None)
+        out.append(tree)
+    return out
+
+
+def _tiled_layer_sweep(cm: CostModel, dp_backend: str, n: int, B: int,
+                       tile_elems: int, masks: np.ndarray, adj: np.ndarray,
+                       conn: np.ndarray, card: np.ndarray, cost: np.ndarray,
+                       bindable: np.ndarray, n_src: np.ndarray,
+                       src_w: np.ndarray, strat: np.ndarray,
+                       split: np.ndarray, excl_of: np.ndarray,
+                       single_mask: np.ndarray, single_src: np.ndarray,
+                       any_single: bool, w_lut: "np.ndarray | None") -> None:
+    """The tiled csg/cmp layer loop over the mutable per-(member, mask) DP
+    state — the in-process fallback shared by the numpy backend and by jax
+    sweeps whose layer schedule exceeds the resident program's budget.
+    Mutates ``conn``/``cost``/``bindable``/``n_src``/``src_w``/``strat``/
+    ``split``/``excl_of`` in place; jax callers enter ``enable_x64`` once
+    around this call (the per-tile kernel skips re-entering it)."""
+    INF = np.inf
+    STRAT_EXCL, STRAT_HASH, STRAT_BIND = (_STRAT_EXCL, _STRAT_HASH,
+                                          _STRAT_BIND)
+    size = 1 << n
+    # small-star fast path: dense per-layer structures cached across calls,
+    # taken whenever the whole dense layer set (< 3^n pairs) fits the budget
+    skel = (_layer_skeletons(n)
+            if n <= _SKEL_CACHE_MAX_N and tile_elems >= 3 ** n else None)
+    if skel is None:
+        pop = np.zeros(size, np.int64)
+        for i in range(n):
+            pop += (masks >> i) & 1
+
     for s in range(2, n + 1):
         # layer connectivity: S is connected iff some member i has a neighbor
         # in S and S \ {i} is connected (spanning-tree leaf argument)
@@ -725,42 +999,80 @@ def _dp_sweep(
         src_w[bo, S_ok] = np.where(is_excl, excl_w[bo, ko], 1.0)
         excl_of[bo, S_ok] = np.where(is_excl, excl_src[bo, ko], -1)
 
-    def build(b: int, m: int) -> JoinTree:
-        ss = frozenset(i for i in range(n) if (m >> i) & 1)
-        st = int(strat[b, m])
-        if st == STRAT_SINGLE:
-            i = next(iter(ss))
-            return JoinTree("leaf", ss, star_cards[b][i], float(cost[b, m]),
-                            sources=list(sels[b].star_sources[i]))
-        if st == STRAT_EXCL:
-            return JoinTree("leaf", ss, float(card[b, m]), float(cost[b, m]),
-                            sources=[int(excl_of[b, m])])
-        am = int(split[b, m])
-        return JoinTree("join", ss, float(card[b, m]), float(cost[b, m]),
-                        build(b, am), build(b, m ^ am),
-                        "hash" if st == STRAT_HASH else "bind")
 
-    full = size - 1
-    comps = None
-    out: list[JoinTree] = []
-    for b in range(B):
-        if np.isfinite(cost[b, full]):
-            out.append(build(b, full))
-            continue
-        # disconnected query: cartesian-combine components by ascending
-        # cardinality (component masks are member-independent)
-        if comps is None:
-            comps = _components(graph)
-        trees = sorted((build(b, sum(1 << i for i in c)) for c in comps),
-                       key=lambda t: t.cardinality)
-        tree = trees[0]
-        for t in trees[1:]:
-            cardx = tree.cardinality * t.cardinality
-            tree = JoinTree("join", tree.stars | t.stars, cardx,
-                            tree.cost + t.cost + cm.intermediate_weight * cardx,
-                            tree, t, "hash", None)
-        out.append(tree)
-    return out
+def _resident_sweep(sched: _DPSchedule, cm: CostModel, card: np.ndarray,
+                    cost: np.ndarray, bindable: np.ndarray,
+                    n_src: np.ndarray, src_w: np.ndarray, strat: np.ndarray,
+                    split: np.ndarray, excl_of: np.ndarray,
+                    single_mask: np.ndarray, single_src: np.ndarray,
+                    w_lut: "np.ndarray | None") -> None:
+    """Host glue for the device-resident sweep: precompute the exclusive-
+    group leaf seeds over *every* mask (the device program cannot interpret
+    source sets), ship the seeds + the topology's index schedule through
+    ``dp_sweep_resident`` in one round trip, and merge the returned winner
+    planes back into the mutable DP state.  The seed math is the tiled
+    path's element for element — same ``leaf_cost_v`` inputs, same
+    ``w_lut`` lookups — so plans stay bit-identical across paths."""
+    from repro.kernels.dp_layer import dp_sweep_resident
+
+    B, size = cost.shape
+    n = sched.n
+
+    excl_cost = np.full((B, size), np.inf)
+    excl_w = np.ones((B, size))
+    excl_src_all = np.full((B, size), -1, np.int64)
+    union = int(np.bitwise_or.reduce(single_mask)) if B else 0
+    if union:
+        # only subsets of some member's single mask can host a group leaf
+        # (every member pinned to exactly one source), so the seed math runs
+        # over that — usually tiny — candidate set, not all 2^n masks.
+        # ref_src is the lowest member's source, the tiled path's
+        # ``srcs_mat[:, :, 0]``; the group leaf exists iff every member
+        # star shares it
+        masks = np.arange(size, dtype=np.int64)
+        cand = masks[(masks & ~np.int64(union)) == 0]
+        ref_src = np.full((B, len(cand)), -1, np.int64)
+        same = np.ones((B, len(cand)), bool)
+        npop = np.zeros(len(cand), np.int64)
+        for i in range(n):
+            if not (union >> i) & 1:
+                continue
+            has = ((cand >> i) & 1) == 1
+            npop += has
+            s_i = single_src[:, i:i + 1]
+            mism = has[None, :] & (ref_src >= 0) & (ref_src != s_i)
+            ref_src = np.where(has[None, :] & (ref_src < 0), s_i, ref_src)
+            same &= ~mism
+        in_single = (cand[None, :] & ~single_mask[:, None]) == 0
+        ok = in_single & same & (npop[None, :] >= 2) & (ref_src >= 0)
+        w = w_lut[ref_src] if w_lut is not None else 1.0
+        if w_lut is not None:
+            excl_w[:, cand] = np.where(ok, w, 1.0)
+        excl_cost[:, cand] = np.where(ok, cm.leaf_cost_v(card[:, cand], 1, w),
+                                      np.inf)
+        excl_src_all[:, cand] = np.where(ok, ref_src, -1)
+
+    if sched.dev is None:
+        import jax.numpy as jnp
+
+        sched.dev = tuple(jnp.asarray(x) for x in (
+            sched.pair_a, sched.pair_b, sched.pair_seg, sched.layer_cols))
+    params = (cm.intermediate_weight, cm.transfer_weight, cm.request_cost,
+              cm.bind_batch)
+    cost_d, strat_d, split_d = dp_sweep_resident(
+        params, *sched.dev, card, excl_cost, excl_w, cost,
+        n_src.astype(np.float64), src_w)
+
+    # strat 0 == the device never wrote the mask (singletons, disconnected
+    # or unreachable subsets): those keep their host-seeded state.  Only
+    # the planes ``build()`` reads are merged — bindable/n_src/src_w are
+    # dead once the sweep is over
+    written = strat_d != 0
+    np.copyto(cost, cost_d, where=written)
+    np.copyto(strat, strat_d.astype(np.int8), where=written)
+    np.copyto(split, split_d.astype(np.int64), where=written)
+    is_excl = written & (strat_d == _STRAT_EXCL)
+    np.copyto(excl_of, excl_src_all, where=is_excl)
 
 
 def _layer_tile_jax(cm: CostModel, cost: np.ndarray, card: np.ndarray,

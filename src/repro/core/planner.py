@@ -252,8 +252,10 @@ class OdysseyOptimizer:
         # peak bytes for the join-order DP's per-layer candidate tiles
         # (None == repro.core.join_order.DP_BLOCK_BYTES)
         self.dp_block_bytes = dp_block_bytes
-        # who prices the DP's layer tiles: 'numpy' (in-process) or 'jax'
-        # (the repro.kernels.dp_layer Pallas kernel); plans are bit-identical
+        # who runs the DP sweep: 'numpy' (in-process tiled layer loop) or
+        # 'jax' (one device-resident repro.kernels.dp_layer program per
+        # sweep, per-layer kernel tiles as the oversized-schedule fallback);
+        # plans are bit-identical either way
         if dp_backend not in DP_BACKENDS:
             raise ValueError(f"unknown dp_backend {dp_backend!r} "
                              f"(expected one of {DP_BACKENDS})")

@@ -69,6 +69,63 @@ def dp_layer_ref(cost_a, cost_b, card_a, n_src_b, src_w_b, bindable, valid,
     return best, first, bind_at
 
 
+def dp_sweep_ref(params, pair_a, pair_b, pair_seg, layer_cols, card,
+                 excl_cost, excl_w, cost0, n_src0, src_w0):
+    """Oracle for ``kernels/dp_layer.dp_sweep_resident``: the whole scanned
+    sweep re-evaluated candidate by candidate in scalar form (python loops
+    over layers, columns and flat pairs — deliberately nothing shared with
+    the scatter/gather program it checks).  Inputs are the program's exactly:
+    the ``(L, P)``/``(L, C)`` sentinel-padded schedule, the ``(B, size)``
+    cardinality plane, the exclusive-leaf seeds and the singleton seeds.
+    Returns ``(cost, strat, split)`` with the program's strategy codes
+    (0 never-written, 2 exclusive leaf, 3 hash, 4 bind).  Float64 numpy
+    throughout, with the scalar operation order of ``CostModel`` —
+    candidates priced in flat-position order, first strict minimum wins,
+    the exclusive leaf is candidate 0."""
+    import numpy as np
+
+    iw, tw, rc, bb = [float(v) for v in params]
+    cost = np.array(cost0, dtype=np.float64)
+    n_src = np.array(n_src0, dtype=np.float64)
+    src_w = np.array(src_w0, dtype=np.float64)
+    B, size = cost.shape
+    strat = np.zeros((B, size), np.int32)
+    split = np.zeros((B, size), np.int32)
+    C = layer_cols.shape[1]
+    for li in range(pair_a.shape[0]):
+        for ci in range(C):
+            S = int(layer_cols[li, ci])
+            if S >= size:                      # padded column
+                continue
+            flat = np.nonzero(pair_seg[li] == ci)[0]
+            for b in range(B):
+                best, b_split, b_bind = np.inf, 0, False
+                for p in flat:
+                    am, bm = int(pair_a[li, p]), int(pair_b[li, p])
+                    hc = (cost[b, am] + cost[b, bm]) + iw * card[b, S]
+                    n_req = max(1.0, card[b, am] / bb) * n_src[b, bm]
+                    bc = cost[b, am] + ((rc * n_req
+                                         + tw * card[b, S] * src_w[b, bm])
+                                        + iw * card[b, S])
+                    is_bind = bool(n_src[b, bm] > 0) and bc < hc
+                    c = bc if is_bind else hc
+                    if c < best:
+                        best, b_split, b_bind = c, am, is_bind
+                ec = excl_cost[b, S]
+                if best < ec:
+                    cost[b, S] = best
+                    strat[b, S] = 4 if b_bind else 3
+                    split[b, S] = b_split
+                    n_src[b, S] = 0.0
+                    src_w[b, S] = 1.0
+                elif np.isfinite(ec):
+                    cost[b, S] = ec
+                    strat[b, S] = 2
+                    n_src[b, S] = 1.0
+                    src_w[b, S] = excl_w[b, S]
+    return cost, strat, split
+
+
 def ssm_scan_ref(dt, bt, ct, x, a) -> jax.Array:
     """Selective-scan oracle via associative scan (models/mamba.py math)."""
     dA = jnp.exp(dt[..., None] * a)                          # (B,S,D,N)

@@ -157,10 +157,19 @@ class ServeEngine:
         """Drain queue + active slots; returns only the requests retired by
         *this* call (``self.finished`` keeps the cumulative history — the
         sibling ``QueryServeEngine`` contract, so repeated drains never
-        re-report earlier completions)."""
+        re-report earlier completions).
+
+        Raises ``RuntimeError`` if ``max_steps`` is exhausted with work
+        still pending — a partial drain must not be mistakable for a full
+        one (undrained requests stay on ``self.queue``/``self.active``)."""
         n0 = len(self.finished)
         steps = 0
         while (self.queue or self.active) and steps < max_steps:
             self.step()
             steps += 1
+        if self.queue or self.active:
+            raise RuntimeError(
+                f"run_until_done gave up after {max_steps} steps with "
+                f"{len(self.queue)} queued and {len(self.active)} active "
+                f"request(s) remaining (finished stay on .finished)")
         return self.finished[n0:]

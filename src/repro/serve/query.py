@@ -15,8 +15,9 @@ A structurally repetitive stream (the FedBench/templated-workload serving
 case) therefore pays per *shape*, not per query, for planning — and on top
 of that, warm steady-state traffic is absorbed by the optimizer's epoch-
 keyed plan cache across steps.  ``dp_backend='jax'`` routes every shape
-group's DP sweep through the ``repro.kernels.dp_layer`` Pallas kernel
-(plans stay bit-identical; see docs/planner.md "On-device DP sweep").
+group's DP sweep through the device-resident ``repro.kernels.dp_layer``
+sweep program (plans stay bit-identical; see docs/planner.md "On-device
+DP sweep").
 """
 from __future__ import annotations
 
@@ -124,10 +125,20 @@ class QueryServeEngine:
         """Drain the queue; returns only the requests completed by *this*
         call (the cumulative history stays on ``self.finished`` — returning
         it here would let a second call re-report, and double-count,
-        requests finished earlier)."""
+        requests finished earlier).
+
+        Raises ``RuntimeError`` if ``max_steps`` is exhausted with requests
+        still queued — a partial drain must not be mistakable for a full
+        one (the undrained requests stay on ``self.queue``; callers can
+        inspect them and call again)."""
         done: "list[QueryRequest]" = []
         steps = 0
         while self.queue and steps < max_steps:
             done.extend(self.step())
             steps += 1
+        if self.queue:
+            raise RuntimeError(
+                f"run_until_done gave up after {max_steps} steps with "
+                f"{len(self.queue)} request(s) still queued ({len(done)} "
+                f"completed this call; the leftover stays on .queue)")
         return done

@@ -362,3 +362,25 @@ def test_query_serve_engine_jax_backend(tiny_fed, tiny_stats, tiny_workload):
         n = len(next(iter(req.rows.values()))) if req.rows else 0
         got = set(zip(*[req.rows[v].tolist() for v in proj])) if n else set()
         assert got == want, req.query.name
+
+
+def test_query_serve_run_until_done_raises_on_partial_drain(tiny_fed,
+                                                            tiny_stats,
+                                                            tiny_workload):
+    """Regression: exhausting ``max_steps`` with requests still queued used
+    to return the partial drain silently — indistinguishable from a full
+    one.  It must raise, keep the leftover on the queue, and a follow-up
+    call must finish the job."""
+    from repro.serve.query import QueryServeEngine
+
+    fed, _ = tiny_fed
+    eng = QueryServeEngine(fed, tiny_stats, max_batch=1)
+    for q in tiny_workload:
+        eng.submit(q)
+    assert len(tiny_workload) > 1
+    with pytest.raises(RuntimeError, match="still queued"):
+        eng.run_until_done(max_steps=1)
+    assert len(eng.queue) == len(tiny_workload) - 1   # leftover intact
+    rest = eng.run_until_done()                       # and still drainable
+    assert len(rest) == len(tiny_workload) - 1
+    assert not eng.queue

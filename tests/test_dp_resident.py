@@ -1,0 +1,129 @@
+"""Differential coverage for the compiled (non-interpret) jax DP path: the
+device-resident fused sweep must return plans bit-identical to the numpy
+sweep and to ``dp_join_order_ref`` on every topology family, including the
+n=12 / B>=8 sizes the backend is benchmarked at, and must fall back to the
+tiled per-layer kernel when a topology's schedule exceeds the budget."""
+import numpy as np
+import pytest
+
+from repro.core.cost import CostModel
+from repro.core.join_order import (
+    DP_SWEEP_COUNTERS,
+    dp_join_order,
+    dp_join_order_batch,
+    dp_join_order_ref,
+)
+from repro.core.source_selection import SourceSelection
+from repro.rdf.shapes import shaped_planning_inputs
+
+
+def _assert_same_tree(a, b, path=""):
+    assert a.kind == b.kind, path
+    assert a.stars == b.stars, path
+    assert a.cardinality == b.cardinality, path
+    assert a.cost == b.cost, path
+    assert a.sources == b.sources, path
+    assert a.strategy == b.strategy, path
+    if a.kind == "join":
+        _assert_same_tree(a.left, b.left, path + "L")
+        _assert_same_tree(a.right, b.right, path + "R")
+
+
+def _vary_sources(sel, b):
+    """Member-specific source trims (same topology, different numbers /
+    exclusive groups per member)."""
+    ss = []
+    for i, srcs in enumerate(sel.star_sources):
+        keep = srcs
+        if len(srcs) > 1 and (i + b) % 3 == 0:
+            keep = srcs[:1] if b % 2 else srcs[1:]
+        ss.append(list(keep))
+    return SourceSelection(star_sources=ss, star_cs=sel.star_cs,
+                           edge_pairs=sel.edge_pairs)
+
+
+@pytest.mark.parametrize("shape,n", [
+    ("chain", 4), ("chain", 8), ("chain", 12),
+    ("tree", 4), ("tree", 8), ("tree", 12),
+    ("clique", 4), ("clique", 8), ("clique", 10),
+])
+def test_resident_bit_identical_to_numpy(shape, n):
+    g, stats, sel, q = shaped_planning_inputs(shape, n, seed=n)
+    cm = CostModel()
+    before = DP_SWEEP_COUNTERS["resident"]
+    t_np = dp_join_order(g, stats, sel, cm, q.distinct, dp_backend="numpy")
+    t_jx = dp_join_order(g, stats, sel, cm, q.distinct, dp_backend="jax")
+    _assert_same_tree(t_np, t_jx)
+    assert DP_SWEEP_COUNTERS["resident"] == before + 1   # resident, not tiled
+
+
+@pytest.mark.slow
+def test_resident_bit_identical_to_numpy_clique12():
+    g, stats, sel, q = shaped_planning_inputs("clique", 12, seed=12)
+    cm = CostModel()
+    t_np = dp_join_order(g, stats, sel, cm, q.distinct, dp_backend="numpy")
+    t_jx = dp_join_order(g, stats, sel, cm, q.distinct, dp_backend="jax")
+    _assert_same_tree(t_np, t_jx)
+
+
+@pytest.mark.parametrize("shape", ["chain", "tree", "clique"])
+def test_resident_bit_identical_to_reference_oracle(shape):
+    """Small-n grid against the frozenset reference, with per-source
+    weights active so the exclusive-group w_lut path is exercised."""
+    cm = CostModel(source_weight={0: 1.5, 1: 0.8, 2: 2.0})
+    for n in (3, 5, 7):
+        for seed in (1, 2):
+            g, stats, sel, q = shaped_planning_inputs(shape, n, seed=seed)
+            t_ref = dp_join_order_ref(g, stats, sel, cost_model=cm,
+                                      distinct=q.distinct)
+            t_jx = dp_join_order(g, stats, sel, cm, q.distinct,
+                                 dp_backend="jax")
+            _assert_same_tree(t_ref, t_jx)
+
+
+def test_resident_b8_stack_bit_identical_members():
+    """B=8 member stack at n=12 with member-specific source selections:
+    every member's tree must match both the numpy batch and its own
+    single-member plan, under default and weighted cost models."""
+    g, stats, sel, q = shaped_planning_inputs("tree", 12, seed=41)
+    sels = [_vary_sources(sel, b) for b in range(8)]
+    graphs = [g] * 8
+    for cm in (CostModel(), CostModel(source_weight={0: 1.3, 1: 0.7})):
+        t_np = dp_join_order_batch(graphs, stats, sels, cm, q.distinct,
+                                   dp_backend="numpy")
+        t_jx = dp_join_order_batch(graphs, stats, sels, cm, q.distinct,
+                                   dp_backend="jax")
+        for a, b in zip(t_np, t_jx):
+            _assert_same_tree(a, b)
+        for b_i in (0, 3, 7):
+            single = dp_join_order(g, stats, sels[b_i], cm, q.distinct,
+                                   dp_backend="numpy")
+            _assert_same_tree(single, t_jx[b_i])
+
+
+def test_oversized_schedule_falls_back_to_tiled():
+    """A tiny block budget must route the jax backend through the tiled
+    per-layer kernel (resident state would not fit) — with identical
+    plans."""
+    g, stats, sel, q = shaped_planning_inputs("clique", 9, seed=7)
+    cm = CostModel()
+    before = dict(DP_SWEEP_COUNTERS)
+    t_np = dp_join_order(g, stats, sel, cm, q.distinct,
+                         block_bytes=2048 * 160, dp_backend="numpy")
+    t_jx = dp_join_order(g, stats, sel, cm, q.distinct,
+                         block_bytes=2048 * 160, dp_backend="jax")
+    _assert_same_tree(t_np, t_jx)
+    assert DP_SWEEP_COUNTERS["tiled"] == before["tiled"] + 1
+    assert DP_SWEEP_COUNTERS["resident"] == before["resident"]
+
+
+def test_batch_report_surfaces_resident_counters(tiny_stats, tiny_workload):
+    """``optimize_batch`` under ``dp_backend='jax'`` reports how its DP
+    sweeps ran (``dp_resident`` / ``dp_tiled``) on the batch report."""
+    from repro.core.planner import OdysseyOptimizer
+
+    opt = OdysseyOptimizer(tiny_stats, plan_cache_size=0, dp_backend="jax")
+    opt.optimize_batch(tiny_workload[:6])
+    report = opt.last_batch_report
+    assert report is not None
+    assert report.dp_resident + report.dp_tiled > 0

@@ -209,3 +209,128 @@ def test_popcount_identity():
     got = np.asarray(ref.popcount32_ref(v))
     want = np.array([bin(int(np.uint32(x))).count("1") for x in np.asarray(v)])
     np.testing.assert_array_equal(got, want)
+
+
+def test_cost_params_form_bitwise_equal_numpy():
+    """The traced-params fused form (``join_candidates_params_jnp``) must
+    reproduce ``join_candidates_v`` bit for bit under x64, including the
+    in-place ``iw * card_out`` hash term — the resident sweep's plans rest
+    on it."""
+    from jax.experimental import enable_x64
+
+    from repro.core.cost import CostModel
+
+    rng = np.random.default_rng(31)
+    cm = CostModel(intermediate_weight=1.25, transfer_weight=0.75,
+                   request_cost=5.0, bind_batch=20)
+    card_out = rng.uniform(0, 1e4, 257)
+    cost_a = rng.uniform(0, 1e3, 257)
+    cost_b = rng.uniform(0, 1e3, 257)
+    card_a = rng.uniform(0, 1e3, 257)
+    n_src = rng.integers(0, 6, 257).astype(np.float64)
+    src_w = rng.uniform(0.25, 4.0, 257)
+    bindable = n_src > 0
+    hj = cm.hash_join_cost_v(card_out)
+    want_c, want_b = cm.join_candidates_v(cost_a, cost_b, card_out, hj,
+                                          card_a, n_src, src_w, bindable)
+    with enable_x64():
+        params = jnp.asarray([cm.intermediate_weight, cm.transfer_weight,
+                              cm.request_cost, cm.bind_batch], jnp.float64)
+        got_c, got_b = CostModel.join_candidates_params_jnp(
+            params, jnp.asarray(cost_a), jnp.asarray(cost_b),
+            jnp.asarray(card_out), jnp.asarray(card_a), jnp.asarray(n_src),
+            jnp.asarray(src_w), jnp.asarray(bindable))
+    assert np.asarray(got_c).dtype == np.float64
+    np.testing.assert_array_equal(np.asarray(got_c), want_c)
+    np.testing.assert_array_equal(np.asarray(got_b), want_b)
+
+
+def test_program_cache_one_compile_across_shapes_and_params():
+    """Regression for the old ``lru_cache`` keyed on ``(params, interpret)``:
+    two bucketed tile shapes under two different cost-model parameter sets
+    must share ONE cached program entry (params are traced, shapes are
+    specialized inside jax's own jit cache), and a parameter change must not
+    add a jit specialization."""
+    from repro.kernels.dp_layer import PROGRAM_CACHE, dp_layer
+
+    PROGRAM_CACHE.clear()
+    rng = np.random.default_rng(5)
+
+    def tile(B, R, C):
+        return (rng.uniform(1, 9, (B, R, C)), rng.uniform(1, 9, (B, R, C)),
+                rng.uniform(0, 5, (B, R, C)),
+                rng.integers(1, 3, (B, R, C)).astype(np.float64),
+                rng.uniform(0.5, 2, (B, R, C)),
+                rng.random((B, R, C)) < 0.5, rng.random((R, C)) < 0.7,
+                rng.uniform(0, 9, (B, C)))
+
+    p1, p2 = (1.0, 1.0, 5.0, 20), (2.0, 0.5, 7.0, 10)
+    shapes = [(2, 5, 3), (2, 13, 9)]        # distinct bucketed extents
+    for B, R, C in shapes:
+        args = tile(B, R, C)
+        for params in (p1, p2):
+            dp_layer(*args, params)
+    assert len(PROGRAM_CACHE) == 1          # one program entry, ever
+    assert PROGRAM_CACHE.misses == 1
+    assert PROGRAM_CACHE.hits == 2 * len(shapes) - 1
+    assert PROGRAM_CACHE.evictions == 0
+    fn = PROGRAM_CACHE._entries[("layer", True)]
+    if hasattr(fn, "_cache_size"):
+        # one jit specialization per bucketed shape — none per param set
+        assert fn._cache_size() == len(shapes)
+
+
+def test_program_cache_eviction_counter():
+    from repro.kernels.dp_layer import _ProgramCache
+
+    c = _ProgramCache(max_entries=2)
+    for k in ("a", "b", "c"):
+        c.get((k,), lambda: k)
+    assert len(c) == 2
+    assert c.evictions == 1
+    assert c.misses == 3
+    c.get(("c",), lambda: "c")
+    assert c.hits == 1
+
+
+def test_dp_sweep_resident_matches_scalar_ref():
+    """The whole resident fused program (compiled XLA, one ``lax.scan``)
+    vs the independent scalar oracle, on a real topology schedule with
+    injected cost ties, exclusive-group seeds and source-less singletons."""
+    from repro.core import join_order as jo
+    from repro.kernels.dp_layer import dp_sweep_resident
+    from repro.rdf.shapes import shaped_planning_inputs
+
+    g, _, _, _ = shaped_planning_inputs("tree", 8, seed=3)
+    B, n = 4, 8
+    size = 1 << n
+    sched = jo._dp_schedule(g, jo.DP_BLOCK_BYTES, B)
+    assert sched is not None
+    rng = np.random.default_rng(17)
+    # small-integer stats force exact cost ties; the program must break
+    # them like the scalar first-strict-minimum
+    card = rng.integers(1, 5, (B, size)).astype(np.float64)
+    cost0 = np.full((B, size), np.inf)
+    n_src0 = np.zeros((B, size))
+    src_w0 = np.ones((B, size))
+    for i in range(n):
+        m = 1 << i
+        cost0[:, m] = rng.integers(1, 6, B)
+        n_src0[:, m] = rng.integers(0, 3, B)      # some source-less leaves
+        src_w0[:, m] = rng.choice([1.0, 1.5], B)
+    excl_cost = np.full((B, size), np.inf)
+    excl_w = np.ones((B, size))
+    conn_masks = sched.layer_cols[sched.layer_cols < size]
+    pick = rng.choice(conn_masks, 12, replace=False)
+    excl_cost[:, pick] = rng.integers(1, 8, (B, len(pick)))
+    excl_w[:, pick] = rng.choice([1.0, 2.0], (B, len(pick)))
+    params = (1.0, 1.0, 5.0, 20)
+    got = dp_sweep_resident(params, sched.pair_a, sched.pair_b,
+                            sched.pair_seg, sched.layer_cols, card,
+                            excl_cost, excl_w, cost0, n_src0, src_w0)
+    want = ref.dp_sweep_ref(params, sched.pair_a, sched.pair_b,
+                            sched.pair_seg, sched.layer_cols, card,
+                            excl_cost, excl_w, cost0, n_src0, src_w0)
+    np.testing.assert_array_equal(got[0], want[0])
+    np.testing.assert_array_equal(got[1], want[1])
+    np.testing.assert_array_equal(got[2], want[2])

@@ -167,3 +167,17 @@ def test_serve_truncate_overlong_prompt_matches_reference(small_lm):
     assert req.out == want
     assert 1 <= len(req.out) <= 4
     assert int(eng.pos.max()) <= eng.ctx
+
+
+def test_serve_run_until_done_raises_on_partial_drain(small_lm):
+    """Exhausting ``max_steps`` with work still pending must raise instead
+    of silently returning a partial drain (the ``QueryServeEngine``
+    contract)."""
+    cfg, params = small_lm
+    eng = ServeEngine(cfg, params, n_slots=1, ctx_len=64)
+    eng.submit(Request(rid=0, prompt=[5, 9], max_new=8))
+    with pytest.raises(RuntimeError, match="remaining"):
+        eng.run_until_done(max_steps=1)
+    assert eng.queue or eng.active                    # work preserved
+    done = eng.run_until_done()                       # finishes cleanly
+    assert [r.rid for r in done] == [0]
