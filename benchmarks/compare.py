@@ -75,6 +75,13 @@ def compare(current: dict, baseline: dict, tolerance: float) -> tuple[list[str],
     return failures, notes
 
 
+def _is_kernel_ratio(failure_line: str) -> bool:
+    """Guarded metrics that compare two timed callables (kernel vs reference):
+    a regression here is as likely a timer-parity bug as a real slowdown."""
+    name = failure_line.split()[1].rstrip(":") if failure_line.split() else ""
+    return name.startswith("kernel/") or "dp_sweep" in name
+
+
 def main(argv: "list[str] | None" = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("current", help="fresh bench_quick.json")
@@ -97,6 +104,12 @@ def main(argv: "list[str] | None" = None) -> int:
         print(f"\nbenchmark regression gate: {len(failures)} metric(s) "
               f"regressed beyond {args.tolerance:.0%} "
               f"(baseline {args.baseline})", file=sys.stderr)
+        if any(_is_kernel_ratio(line) for line in failures):
+            print("hint: a kernel-ratio metric regressed — before chasing the "
+                  "kernel itself, check the benchmark timer for dispatch "
+                  "parity (jitted vs bare callables: RPR003 bench-parity, "
+                  "docs/analysis.md); PR 5's 'regression' was exactly a "
+                  "skewed timer", file=sys.stderr)
         return 1
     print(f"\nbenchmark regression gate: all {len(baseline)} guarded metrics "
           f"within {args.tolerance:.0%} of baseline")

@@ -29,66 +29,83 @@ def _time(fn, *args, n=5) -> float:
     return (time.perf_counter() - t0) / n * 1e6  # us
 
 
+def _naive_attention(q, k, v):
+    S = q.shape[1]
+    s = jnp.einsum("bqd,bkd->bqk", q, k)
+    m = jnp.where(jnp.arange(S)[None, :] > jnp.arange(S)[:, None], -1e30, 0.0)
+    return jax.nn.softmax(s + m, -1) @ v
+
+
 def run():
     rng = np.random.default_rng(0)
     rows = []
+    # Jitted wrappers are bound once, outside the shape loops: a fresh
+    # `jax.jit(lambda ...)` per iteration would defeat jax's identity-keyed
+    # jit cache and retrace every pass (RPR004).  Static extents (seg_bitmap's
+    # n_seg) ride through `static_argnums` so shape sweeps reuse one wrapper.
     # sorted_intersect
+    jit_si_ref = jax.jit(ref.sorted_intersect_weighted_ref)
+    jit_si = jax.jit(sorted_intersect_weighted)
     for n in (1024, 4096):
         a = jnp.asarray(np.sort(rng.choice(10 * n, n, replace=False)).astype(np.int32))
         b = jnp.asarray(np.sort(rng.choice(10 * n, n, replace=False)).astype(np.int32))
         w = jnp.ones(n, jnp.int32)
-        t_ref = _time(jax.jit(ref.sorted_intersect_weighted_ref), a, w, b, w)
-        t_pal = _time(jax.jit(lambda *x: sorted_intersect_weighted(*x)), a, w, b, w)
+        t_ref = _time(jit_si_ref, a, w, b, w)
+        t_pal = _time(jit_si, a, w, b, w)
         rows.append((f"kernel/sorted_intersect/{n}", t_pal, t_ref))
     # seg_bitmap
+    jit_sb_ref = jax.jit(ref.seg_bitmap_ref, static_argnums=(2, 3))
+    jit_sb = jax.jit(seg_bitmap, static_argnums=2)
     for n, s in ((1024, 128), (4096, 256)):
         seg = jnp.asarray(np.sort(rng.integers(0, s, n)).astype(np.int32))
         bkt = jnp.asarray(rng.integers(0, NBUCKETS, n).astype(np.int32))
-        t_ref = _time(jax.jit(lambda a, b: ref.seg_bitmap_ref(a, b, s, NBUCKETS)), seg, bkt)
-        t_pal = _time(jax.jit(lambda a, b: seg_bitmap(a, b, s)), seg, bkt)
+        t_ref = _time(jit_sb_ref, seg, bkt, s, NBUCKETS)
+        t_pal = _time(jit_sb, seg, bkt, s)
         rows.append((f"kernel/seg_bitmap/{n}x{s}", t_pal, t_ref))
     # join_count
+    jit_jc_ref = jax.jit(ref.join_count_ref)
+    jit_jc = jax.jit(join_count)
     for n in (1024, 4096):
         probe = jnp.asarray(rng.integers(0, 5000, n).astype(np.int32))
         build = jnp.asarray(np.sort(rng.choice(8000, n, replace=False)).astype(np.int32))
         bw = jnp.ones(n, jnp.int32)
-        t_ref = _time(jax.jit(ref.join_count_ref), probe, build, bw)
-        t_pal = _time(jax.jit(lambda *x: join_count(*x)), probe, build, bw)
+        t_ref = _time(jit_jc_ref, probe, build, bw)
+        t_pal = _time(jit_jc, probe, build, bw)
         rows.append((f"kernel/join_count/{n}", t_pal, t_ref))
     # summary_probe
+    jit_sp_ref = jax.jit(ref.summary_probe_ref)
+    jit_sp = jax.jit(summary_probe)
     for na, w in ((128, 8), (256, 32)):
         a = jnp.asarray(rng.integers(-2**31, 2**31 - 1, (na, w), dtype=np.int64).astype(np.int32))
         b = jnp.asarray(rng.integers(-2**31, 2**31 - 1, (na, w), dtype=np.int64).astype(np.int32))
-        t_ref = _time(jax.jit(ref.summary_probe_ref), a, b)
-        t_pal = _time(jax.jit(lambda *x: summary_probe(*x)), a, b)
+        t_ref = _time(jit_sp_ref, a, b)
+        t_pal = _time(jit_sp, a, b)
         rows.append((f"kernel/summary_probe/{na}x{w}", t_pal, t_ref))
     # flash attention
     from repro.kernels.flash_attention import flash_attention
 
+    jit_fa_ref = jax.jit(_naive_attention)
+    jit_fa = jax.jit(functools.partial(flash_attention, causal=True))
     for S in (256, 512):
         q = jnp.asarray(rng.normal(size=(2, S, 128)), jnp.float32)
         k = jnp.asarray(rng.normal(size=(2, S, 128)), jnp.float32)
         v = jnp.asarray(rng.normal(size=(2, S, 128)), jnp.float32)
-
-        def naive(q, k, v):
-            s = jnp.einsum("bqd,bkd->bqk", q, k)
-            m = jnp.where(jnp.arange(S)[None, :] > jnp.arange(S)[:, None], -1e30, 0.0)
-            return jax.nn.softmax(s + m, -1) @ v
-
-        t_ref = _time(jax.jit(naive), q, k, v)
-        t_pal = _time(jax.jit(lambda *x: flash_attention(*x, causal=True)), q, k, v)
+        t_ref = _time(jit_fa_ref, q, k, v)
+        t_pal = _time(jit_fa, q, k, v)
         rows.append((f"kernel/flash_attention/{S}", t_pal, t_ref))
     # selective scan
     from repro.kernels.ssm_scan import ssm_scan
 
+    jit_ss_ref = jax.jit(ref.ssm_scan_ref)
+    jit_ss = jax.jit(functools.partial(ssm_scan, chunk=32))
     for S, D in ((64, 256),):
         dt = jnp.asarray(np.abs(rng.normal(0.1, 0.05, (1, S, D))), jnp.float32)
         bt = jnp.asarray(rng.normal(size=(1, S, 8)), jnp.float32)
         ct = jnp.asarray(rng.normal(size=(1, S, 8)), jnp.float32)
         x = jnp.asarray(rng.normal(size=(1, S, D)), jnp.float32)
         a = -jnp.asarray(np.abs(rng.normal(1.0, 0.3, (D, 8))), jnp.float32)
-        t_ref = _time(jax.jit(ref.ssm_scan_ref), dt, bt, ct, x, a, n=2)
-        t_pal = _time(jax.jit(lambda *z: ssm_scan(*z, chunk=32)), dt, bt, ct, x, a, n=2)
+        t_ref = _time(jit_ss_ref, dt, bt, ct, x, a, n=2)
+        t_pal = _time(jit_ss, dt, bt, ct, x, a, n=2)
         rows.append((f"kernel/ssm_scan/{S}x{D}", t_pal, t_ref))
     # dp_layer (join-order DP layer sweep: dense candidate pricing + per-
     # column first-strict-min).  Both sides are jitted calls on device

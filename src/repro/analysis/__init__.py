@@ -1,0 +1,27 @@
+"""`repro.analysis`: a jax-aware static-analysis suite for this repo.
+
+Mechanizes the bug classes the PR 1-6 bugfix tail kept rediscovering by
+hand (see docs/analysis.md for the rule catalog):
+
+- RPR001 trace-host-sync   host coercions on traced values in jitted code
+- RPR002 cache-aliasing    caches handing out / storing shared mutable state
+- RPR003 bench-parity      benchmark timers comparing jitted vs bare callables
+- RPR004 recompile-hazard  per-call jit wrapping, lru_cache over programs
+- RPR005 x64-discipline    jax float64 escaping ``enable_x64`` in kernels
+- RPR1xx generic hygiene   mutable defaults, broad excepts, library asserts
+
+Run it as ``PYTHONPATH=src python -m repro.analysis src benchmarks``; inline
+suppressions are ``# repro: ignore[RPR001] -- reason`` (reason mandatory)
+and grandfathered findings live in the committed ``analysis_baseline.json``.
+"""
+from repro.analysis.core import (  # noqa: F401
+    AnalysisResult,
+    FileContext,
+    Finding,
+    Rule,
+    all_rules,
+    analyze_paths,
+    get_rule,
+    register,
+)
+from repro.analysis.baseline import diff_baseline, load_baseline, write_baseline  # noqa: F401

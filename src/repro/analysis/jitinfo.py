@@ -1,0 +1,167 @@
+"""Lightweight jit-boundary inference: "is this function body traced?"
+
+Purely syntactic, per module.  A function (or lambda) is considered
+*traced* when it is
+
+- decorated with something jit-like (``@jax.jit``, ``@jit``,
+  ``@partial(jax.jit, ...)``, ``@functools.partial(jax.jit, ...)``),
+- passed to a jit-like call (``jax.jit(f)``, possibly through one level of
+  ``functools.partial``),
+- passed to a tracing combinator (``pl.pallas_call``, ``lax.scan``,
+  ``lax.while_loop``, ``lax.fori_loop``, ``lax.cond``, ``lax.switch``,
+  ``lax.map``, ``lax.associative_scan``, ``jax.vmap``, ``jax.grad``,
+  ``jax.checkpoint``, ``jax.remat``),
+- defined lexically inside a traced function, or
+- called (by name, including ``self.<name>``) from a traced function in the
+  same module — propagated to a fixpoint, so helper chains under a jitted
+  entry point are covered.
+
+False negatives are accepted by design (cross-module reachability is out of
+scope — the CI gate catches the classes of bug this repo actually hits,
+inside the modules that hit them); false positives are kept near zero so
+the suite stays adoptable without suppression sprawl.
+"""
+from __future__ import annotations
+
+import ast
+
+_JIT_NAMES = {"jit"}
+_COMBINATORS = {
+    "pallas_call", "scan", "while_loop", "fori_loop", "cond", "switch",
+    "map", "associative_scan", "vmap", "grad", "value_and_grad",
+    "checkpoint", "remat",
+}
+_PARTIAL_NAMES = {"partial"}
+
+
+def _terminal_name(node: ast.AST) -> str | None:
+    """`jax.jit` -> 'jit', `pl.pallas_call` -> 'pallas_call', `jit` -> 'jit'."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def _is_jit_like(node: ast.AST) -> bool:
+    """Does this expression evaluate to a jit transform?  Covers ``jax.jit``
+    and ``partial(jax.jit, ...)``."""
+    name = _terminal_name(node)
+    if name in _JIT_NAMES:
+        return True
+    if isinstance(node, ast.Call) and _terminal_name(node.func) in _PARTIAL_NAMES:
+        return bool(node.args) and _is_jit_like(node.args[0])
+    return False
+
+
+def _unwrap_partial(node: ast.AST) -> ast.AST:
+    """``functools.partial(f, ...)`` -> ``f`` (one level)."""
+    if (isinstance(node, ast.Call)
+            and _terminal_name(node.func) in _PARTIAL_NAMES and node.args):
+        return node.args[0]
+    return node
+
+
+class JitInfo:
+    """Traced-function inference for one module AST."""
+
+    def __init__(self, tree: ast.Module):
+        self.tree = tree
+        # every function-ish node, by id, plus name -> nodes for call-graph
+        self._funcs: dict[int, ast.AST] = {}
+        self._by_name: dict[str, list[ast.AST]] = {}
+        self._enclosing: dict[int, ast.AST] = {}   # func node -> nearest func
+        self._traced: set[int] = set()
+        self._collect()
+        self._seed_roots()
+        self._propagate()
+
+    # -- public ------------------------------------------------------------
+
+    def is_traced(self, func_node: ast.AST) -> bool:
+        return id(func_node) in self._traced
+
+    def traced_functions(self) -> list[ast.AST]:
+        return [n for n in self._funcs.values() if id(n) in self._traced]
+
+    def function_nodes(self) -> list[ast.AST]:
+        return list(self._funcs.values())
+
+    # -- construction ------------------------------------------------------
+
+    def _collect(self) -> None:
+        stack: list[ast.AST] = []
+
+        def visit(node: ast.AST) -> None:
+            is_func = isinstance(
+                node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda))
+            if is_func:
+                self._funcs[id(node)] = node
+                if stack:
+                    self._enclosing[id(node)] = stack[-1]
+                name = getattr(node, "name", None)
+                if name:
+                    self._by_name.setdefault(name, []).append(node)
+                stack.append(node)
+            for child in ast.iter_child_nodes(node):
+                visit(child)
+            if is_func:
+                stack.pop()
+
+        visit(self.tree)
+
+    def _mark_callable_expr(self, expr: ast.AST) -> None:
+        """Mark the function a callable-expression refers to, if resolvable."""
+        expr = _unwrap_partial(expr)
+        if isinstance(expr, ast.Lambda):
+            self._traced.add(id(expr))
+        elif isinstance(expr, ast.Name):
+            for fn in self._by_name.get(expr.id, []):
+                self._traced.add(id(fn))
+        elif isinstance(expr, ast.Attribute):
+            # self._helper / mod.fn: match by terminal name if defined here
+            for fn in self._by_name.get(expr.attr, []):
+                self._traced.add(id(fn))
+
+    def _seed_roots(self) -> None:
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    if _is_jit_like(dec) or (
+                            isinstance(dec, ast.Call) and _is_jit_like(dec.func)):
+                        self._traced.add(id(node))
+            elif isinstance(node, ast.Call):
+                name = _terminal_name(node.func)
+                if _is_jit_like(node.func):
+                    if node.args:
+                        self._mark_callable_expr(node.args[0])
+                elif name in _COMBINATORS:
+                    for arg in node.args:
+                        if isinstance(_unwrap_partial(arg),
+                                      (ast.Lambda, ast.Name, ast.Attribute)):
+                            self._mark_callable_expr(arg)
+
+    def _propagate(self) -> None:
+        changed = True
+        while changed:
+            changed = False
+            # lexical nesting: a def inside a traced function is traced
+            for fid, node in self._funcs.items():
+                if fid in self._traced:
+                    continue
+                enc = self._enclosing.get(fid)
+                if enc is not None and id(enc) in self._traced:
+                    self._traced.add(fid)
+                    changed = True
+            # same-module call graph: traced body calls name -> name traced
+            for node in list(self.traced_functions()):
+                for call in ast.walk(node):
+                    if not isinstance(call, ast.Call):
+                        continue
+                    name = _terminal_name(call.func)
+                    if name in _JIT_NAMES or name in _COMBINATORS:
+                        continue      # already handled as roots
+                    for fn in self._by_name.get(name or "", []):
+                        if id(fn) not in self._traced:
+                            self._traced.add(id(fn))
+                            changed = True

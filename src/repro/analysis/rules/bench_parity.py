@@ -1,0 +1,98 @@
+"""RPR003 bench-parity: benchmark timers comparing jitted vs bare callables.
+
+The bug class (PR 5): ``kernel_bench`` timed ``jax.jit(ref...)`` against a
+*bare* ``lambda`` over the Pallas entry — charging the Pallas side Python
+dispatch + retrace overhead on every call that the jitted reference never
+paid, skewing every kernel ratio.  Both sides of a timed comparison must
+cross the same dispatch boundary.
+
+Detection (benchmark files only): within one function, collect the callable
+argument of every timing call (a call to ``_time``/``timeit``/``*_time*``
+whose first argument is callable-shaped).  If at least one timed callable
+is jit-wrapped (its expression — or the expression its name was assigned
+from — mentions ``jit(``), then any *bare* timed callable in the same
+function is flagged: a bare ``lambda``, a bare local ``def``, or a name /
+attribute with no jit in sight.  Calls (``prog(params)``) are assumed to
+return prepared device callables and are not flagged.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from repro.analysis.core import FileContext, Finding, Rule, register
+
+_TIMER_HINT = "time"
+
+
+def _is_bench_file(path: str) -> bool:
+    parts = path.replace("\\", "/").split("/")
+    return "benchmarks" in parts or parts[-1].endswith("_bench.py")
+
+
+def _mentions_jit(node: ast.AST) -> bool:
+    return "jit(" in ast.unparse(node).replace(" ", "")
+
+
+@register
+class BenchParity(Rule):
+    rule_id = "RPR003"
+    name = "bench-parity"
+    description = ("timing loop compares a jit-wrapped callable against a "
+                   "bare one (dispatch/trace overhead skews the ratio)")
+
+    def applies(self, ctx: FileContext) -> bool:
+        return _is_bench_file(ctx.path)
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        for fn in ctx.jit.function_nodes():
+            if isinstance(fn, ast.Lambda):
+                continue
+            # only inspect top-level function scopes (methods included)
+            yield from self._check_scope(ctx, fn)
+
+    def _check_scope(self, ctx, fn) -> Iterable[Finding]:
+        timed: list[ast.AST] = []
+        assigns: dict[str, ast.AST] = {}
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and isinstance(node.value, ast.AST):
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        assigns[tgt.id] = node.value
+            if isinstance(node, ast.Call):
+                name = None
+                if isinstance(node.func, ast.Name):
+                    name = node.func.id
+                elif isinstance(node.func, ast.Attribute):
+                    name = node.func.attr
+                if name and _TIMER_HINT in name.lower() and node.args:
+                    cand = node.args[0]
+                    if isinstance(cand, (ast.Lambda, ast.Name, ast.Attribute,
+                                         ast.Call)):
+                        timed.append(cand)
+        if len(timed) < 2:
+            return
+
+        def is_jitted(arg: ast.AST) -> bool:
+            if _mentions_jit(arg):
+                return True
+            if isinstance(arg, ast.Name) and arg.id in assigns:
+                return _mentions_jit(assigns[arg.id])
+            return False
+
+        if not any(is_jitted(a) for a in timed):
+            return
+        for arg in timed:
+            if is_jitted(arg):
+                continue
+            if isinstance(arg, ast.Call):
+                continue          # assume a prepared/jitted callable factory
+            if isinstance(arg, ast.Name) and arg.id not in assigns:
+                continue          # unknown origin (import/global): no verdict
+            kind = ("bare lambda" if isinstance(arg, ast.Lambda) else
+                    f"bare `{ast.unparse(arg)}`")
+            yield ctx.finding(
+                self, arg,
+                f"{kind} timed against a jit-wrapped rival in the same "
+                "function; wrap both sides in `jax.jit` (PR 5's "
+                "kernel_bench dispatch skew)")

@@ -1,0 +1,92 @@
+"""RPR004 recompile-hazard: program caches that silently recompile per call.
+
+The bug class (PR 6): ``dp_layer``'s ``lru_cache(maxsize=64)`` keyed the
+compiled per-tile program on the cost-model *values* — which the trace does
+not depend on at all — so a parameter sweep compiled (and at >64 sets,
+evicted) one program per tuple.  The sibling shapes of the same bug:
+
+- ``jax.jit(lambda ...)`` (or a freshly ``def``-ed local) created inside a
+  loop: each iteration builds a new function object, so jax's jit cache —
+  keyed on function identity — can never hit, and every call retraces.
+- ``jax.jit(lambda ...)(...)`` immediate invocation: the wrapper is thrown
+  away after one call, guaranteeing a retrace next time the line runs.
+- ``functools.lru_cache`` over a function that builds jax programs/arrays:
+  the cache keys on argument equality, not on what the trace depends on
+  (and unhashable array arguments raise ``TypeError`` at first call).
+  Key program caches structurally instead — see ``dp_layer._ProgramCache``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from repro.analysis.core import FileContext, Finding, Rule, register
+from repro.analysis.jitinfo import _is_jit_like
+
+_JAX_MARKERS = ("jnp.", "jax.", "pallas", "pl.")
+
+
+@register
+class RecompileHazard(Rule):
+    rule_id = "RPR004"
+    name = "recompile-hazard"
+    description = ("per-call jit wrapping or value-keyed caching of compiled "
+                   "programs (every call/entry recompiles)")
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        local_defs = {getattr(n, "name", None)
+                      for n in ctx.jit.function_nodes()}
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.For, ast.While)):
+                yield from self._check_loop(ctx, node, local_defs)
+            elif isinstance(node, ast.Call):
+                yield from self._check_immediate(ctx, node)
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield from self._check_lru(ctx, node)
+
+    def _jit_wrap_of_fresh_fn(self, call: ast.AST, local_defs) -> bool:
+        return (isinstance(call, ast.Call) and _is_jit_like(call.func)
+                and bool(call.args)
+                and (isinstance(call.args[0], ast.Lambda)
+                     or (isinstance(call.args[0], ast.Name)
+                         and call.args[0].id in local_defs)))
+
+    def _check_loop(self, ctx, loop, local_defs) -> Iterable[Finding]:
+        for node in ast.walk(loop):
+            if node is loop:
+                continue
+            if self._jit_wrap_of_fresh_fn(node, local_defs):
+                target = ("a lambda" if isinstance(node.args[0], ast.Lambda)
+                          else f"local `{node.args[0].id}`")
+                yield ctx.finding(
+                    self, node,
+                    f"`jax.jit` wraps {target} inside a loop: a fresh "
+                    "function object per iteration defeats jax's "
+                    "identity-keyed jit cache (retrace every pass) — hoist "
+                    "the jitted wrapper out of the loop")
+
+    def _check_immediate(self, ctx, call) -> Iterable[Finding]:
+        if isinstance(call.func, ast.Call) \
+                and self._jit_wrap_of_fresh_fn(call.func, set()):
+            yield ctx.finding(
+                self, call,
+                "`jax.jit(lambda ...)(...)` builds and discards the jitted "
+                "wrapper in one expression: every execution retraces — bind "
+                "the jitted callable once and reuse it")
+
+    def _check_lru(self, ctx, fn) -> Iterable[Finding]:
+        for dec in fn.decorator_list:
+            base = dec.func if isinstance(dec, ast.Call) else dec
+            name = base.attr if isinstance(base, ast.Attribute) else (
+                base.id if isinstance(base, ast.Name) else None)
+            if name not in ("lru_cache", "cache"):
+                continue
+            body_src = "".join(ast.unparse(stmt) for stmt in fn.body)
+            if any(m in body_src for m in _JAX_MARKERS):
+                yield ctx.finding(
+                    self, dec,
+                    f"`{name}` over `{fn.name}`, which builds jax programs/"
+                    "arrays: the cache keys on argument *values*, not on "
+                    "what the trace depends on (PR 6's `_ProgramCache` bug; "
+                    "unhashable array args raise TypeError) — key "
+                    "structurally on the trace-relevant parts")

@@ -1,0 +1,75 @@
+"""RPR001 trace-host-sync: host coercions on traced values in jitted code.
+
+The bug class: ``float(x)`` / ``int(x)`` / ``bool(x)`` / ``x.item()`` /
+``np.asarray(x)`` inside a jitted (or Pallas/``lax.scan``-traced) body
+either raises ``TracerConversionError`` at trace time or — worse, on
+concrete sub-paths — silently forces a device->host sync per call, which is
+exactly the per-layer round-trip that made ``dp_backend='jax'`` lose to
+numpy before PR 6 went device-resident.
+
+Shape arithmetic is *static* under trace, so coercions whose argument only
+touches ``.shape`` / ``.ndim`` / ``len(...)`` / constants are not flagged.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from repro.analysis.core import FileContext, Finding, Rule, register
+
+_COERCIONS = {"float", "int", "bool", "complex"}
+_SYNC_METHODS = {"item", "tolist"}
+_NP_BASES = {"np", "numpy", "onp"}
+_NP_SYNCS = {"asarray", "array", "copy"}
+_STATIC_ATTRS = {"shape", "ndim", "size", "dtype", "itemsize"}
+
+
+def _is_static_expr(node: ast.AST) -> bool:
+    """True when every leaf of the expression is trace-time static."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Attribute) and sub.attr in _STATIC_ATTRS:
+            return True
+        if isinstance(sub, ast.Call) and isinstance(sub.func, ast.Name) \
+                and sub.func.id == "len":
+            return True
+    return all(isinstance(s, (ast.Constant, ast.UnaryOp, ast.BinOp, ast.unaryop,
+                              ast.operator, ast.Load)) for s in ast.walk(node))
+
+
+@register
+class TraceHostSync(Rule):
+    rule_id = "RPR001"
+    name = "trace-host-sync"
+    description = ("host coercion (float/int/bool/.item()/np.asarray) on a "
+                   "traced value inside a jitted body")
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        seen: set[int] = set()
+        for fn in ctx.jit.traced_functions():
+            fn_name = getattr(fn, "name", "<lambda>")
+            for node in ast.walk(fn):
+                if id(node) in seen or not isinstance(node, ast.Call):
+                    continue
+                seen.add(id(node))
+                hit = self._classify(node)
+                if hit:
+                    yield ctx.finding(self, node,
+                                      f"{hit} inside traced `{fn_name}` forces a "
+                                      "host sync (or fails to trace); keep the "
+                                      "value on device or hoist the coercion "
+                                      "outside the jit boundary")
+
+    def _classify(self, call: ast.Call) -> str | None:
+        func = call.func
+        if isinstance(func, ast.Name) and func.id in _COERCIONS:
+            if len(call.args) == 1 and not _is_static_expr(call.args[0]):
+                return f"`{func.id}(...)`"
+        if isinstance(func, ast.Attribute):
+            if func.attr in _SYNC_METHODS:
+                return f"`.{func.attr}()`"
+            if (func.attr in _NP_SYNCS and isinstance(func.value, ast.Name)
+                    and func.value.id in _NP_BASES):
+                return f"`{func.value.id}.{func.attr}(...)`"
+        if isinstance(func, ast.Attribute) and func.attr == "device_get":
+            return "`jax.device_get(...)`"
+        return None

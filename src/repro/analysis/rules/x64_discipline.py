@@ -1,0 +1,86 @@
+"""RPR005 x64-discipline: jax float64 escaping ``enable_x64`` in kernels.
+
+The bug class: the DP prices in float64 to stay bit-identical to the numpy
+sweep, but jax silently *downcasts to float32* when ``enable_x64`` is off —
+no error, just plans that stop matching the oracle on tie-breaks.  Every
+``jnp.float64`` (or ``dtype="float64"`` handed to a jnp/jax call) in
+``src/repro/kernels/`` must therefore sit under an ``enable_x64`` context:
+
+- lexically inside a ``with enable_x64():`` block, or
+- inside a function that *contains* such a block or the
+  ``if jax.config.jax_enable_x64: ...`` guard pattern (the ``run()``
+  closure idiom in ``dp_layer.py``), or any enclosing function that does.
+
+Host-side ``np.float64`` is exempt — numpy is always 64-bit.  A function
+whose *callers* hold the context by documented contract can't be proven
+safe syntactically: suppress with that contract as the reason.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from repro.analysis.core import FileContext, Finding, Rule, register
+
+_JNP_BASES = {"jnp", "jax"}
+
+
+def _is_kernels_file(path: str) -> bool:
+    return "kernels" in path.replace("\\", "/").split("/")[:-1]
+
+
+def _has_x64_guard(fn: ast.AST) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.With):
+            for item in node.items:
+                if "enable_x64" in ast.unparse(item.context_expr):
+                    return True
+        if isinstance(node, ast.If) and "jax_enable_x64" in ast.unparse(node.test):
+            return True
+    return False
+
+
+@register
+class X64Discipline(Rule):
+    rule_id = "RPR005"
+    name = "x64-discipline"
+    description = ("jax float64 dtype used outside an enable_x64 context in "
+                   "kernel code (silent downcast to float32 breaks "
+                   "bit-identity)")
+
+    def applies(self, ctx: FileContext) -> bool:
+        return _is_kernels_file(ctx.path)
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        for node in ast.walk(ctx.tree):
+            ref = self._f64_ref(node)
+            if ref is None:
+                continue
+            if self._guarded(ctx, node):
+                continue
+            yield ctx.finding(
+                self, node,
+                f"{ref} outside an `enable_x64` context: jax silently "
+                "downcasts to float32 and plans drift off the numpy oracle "
+                "on tie-breaks — enter `enable_x64` (or suppress citing the "
+                "caller's documented context)")
+
+    def _f64_ref(self, node: ast.AST) -> str | None:
+        if isinstance(node, ast.Attribute) and node.attr == "float64" \
+                and isinstance(node.value, ast.Name) \
+                and node.value.id in _JNP_BASES:
+            return f"`{node.value.id}.float64`"
+        if isinstance(node, ast.Constant) and node.value == "float64":
+            return "`\"float64\"` dtype literal"
+        return None
+
+    def _guarded(self, ctx: FileContext, node: ast.AST) -> bool:
+        for anc in ctx.ancestors(node):
+            if isinstance(anc, ast.With):
+                for item in anc.items:
+                    if "enable_x64" in ast.unparse(item.context_expr):
+                        return True
+            if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.Lambda)) and _has_x64_guard(anc):
+                return True
+        return False

@@ -176,6 +176,9 @@ class PlanCache:
             return None
         self._entries.move_to_end(sig)
         self.hits += 1
+        # repro: ignore[RPR002] -- entry.plan is stored pre-detached (put() runs
+        # _detach_plan) and every hit site re-detaches before handing the plan
+        # to callers (see optimize()/_rebind); the entry itself never escapes
         return entry
 
     def put(self, sig: tuple, plan: PhysicalPlan, var_order: tuple[str, ...],

@@ -28,6 +28,9 @@ class RetryPolicy:
         for attempt in range(self.max_attempts):
             try:
                 return fn(*args, **kw)
+            # repro: ignore[RPR102] -- deliberate retry boundary: any endpoint
+            # failure is retried with backoff, and the terminal RuntimeError
+            # below chains the last exception so nothing is swallowed
             except Exception as exc:  # noqa: BLE001 - deliberate boundary
                 last_exc = exc
                 if on_retry is not None:

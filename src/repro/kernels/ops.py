@@ -1,6 +1,14 @@
 """Public jit'd wrappers: padding, dtype handling, and host-friendly entry
 points for the Pallas kernels. ``interpret`` defaults to True (CPU container);
 a TPU deployment flips it to False via ``set_interpret``.
+
+Host-coercion audit (``repro.analysis`` RPR001): every ``int(...)`` /
+``np.asarray(...)`` in this module sits in an *untraced* host entry point —
+the jit boundary is the kernel call each wrapper makes, so the coercions
+here are the single intended device->host sync per call, not a hidden sync
+inside a traced body.  Keep it that way: anything new that runs *under*
+``jax.jit``/``pallas_call`` must not coerce traced values (the analyzer's
+jit-reachability inference will flag it).
 """
 from __future__ import annotations
 

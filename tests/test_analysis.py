@@ -1,0 +1,484 @@
+"""Tests for the `repro.analysis` static-analysis suite.
+
+Three layers:
+
+1. Fixture snippets per RPR rule: the rule fires on the bug pattern and
+   stays silent on the clean / suppressed twin.  The RPR003 firing fixture
+   is literally the PR 5 kernel_bench bug (bare lambda timed against a
+   jitted reference), so deliberately re-introducing it anywhere in
+   `benchmarks/` fails the CI lint job.
+2. Framework mechanics: suppression parsing (mandatory reasons, RPR100),
+   fingerprint stability under unrelated edits, baseline diff/round-trip,
+   CLI exit codes and --format=json.
+3. End-to-end: the committed `analysis_baseline.json` matches a fresh run
+   over the real `src` + `benchmarks` tree *exactly* — any finding drift
+   (new finding, or a fixed finding whose baseline line wasn't retired)
+   fails here and in CI.
+"""
+from __future__ import annotations
+
+import json
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (
+    analyze_paths,
+    diff_baseline,
+    load_baseline,
+    write_baseline,
+)
+from repro.analysis.cli import main as cli_main
+from repro.analysis.core import all_rules
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def run_on(tmp_path: Path, relpath: str, code: str, rules=None):
+    path = tmp_path / relpath
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(textwrap.dedent(code))
+    return analyze_paths([str(tmp_path)], root=str(tmp_path), rules=rules)
+
+
+def rule_lines(result, rule):
+    return [(f.path, f.line) for f in result.findings if f.rule == rule]
+
+
+# --------------------------------------------------------------------------
+# RPR001 trace-host-sync
+# --------------------------------------------------------------------------
+
+def test_rpr001_fires_in_jitted_body(tmp_path):
+    res = run_on(tmp_path, "mod.py", """
+        import jax, numpy as np
+
+        @jax.jit
+        def step(x):
+            scale = float(x[0])          # host sync on a traced value
+            return x * scale
+
+        def helper(y):
+            return np.asarray(y)         # traced via call graph below
+
+        @jax.jit
+        def entry(y):
+            return helper(y) + 1
+    """, rules=["RPR001"])
+    lines = rule_lines(res, "RPR001")
+    assert ("mod.py", 6) in lines        # float() in @jax.jit body
+    assert ("mod.py", 10) in lines       # np.asarray via jit reachability
+
+
+def test_rpr001_scan_and_pallas_bodies_are_traced(tmp_path):
+    res = run_on(tmp_path, "mod.py", """
+        import jax
+        from jax import lax
+
+        def body(carry, x):
+            return carry + x.item(), None        # .item() in a scanned body
+
+        def sweep(xs):
+            return lax.scan(body, 0.0, xs)
+    """, rules=["RPR001"])
+    assert rule_lines(res, "RPR001") == [("mod.py", 6)]
+
+
+def test_rpr001_clean_twins(tmp_path):
+    res = run_on(tmp_path, "mod.py", """
+        import jax, numpy as np
+
+        def host_entry(x):
+            return float(np.asarray(x)[0])   # untraced host wrapper: fine
+
+        @jax.jit
+        def step(x):
+            n = int(x.shape[0])              # shape math is static: fine
+            return x * n
+
+        @jax.jit
+        def suppressed(x):
+            # repro: ignore[RPR001] -- concrete by contract: x is weak-typed python
+            return x * float(x[0])
+    """, rules=["RPR001"])
+    assert rule_lines(res, "RPR001") == []
+    assert len(res.suppressed) == 1
+
+
+# --------------------------------------------------------------------------
+# RPR002 cache-aliasing
+# --------------------------------------------------------------------------
+
+def test_rpr002_fires_on_aliasing_get_and_put(tmp_path):
+    res = run_on(tmp_path, "cache.py", """
+        class PlanCache:
+            def get(self, sig):
+                entry = self._entries.get(sig)
+                return entry                      # shared mutable entry
+
+            def put(self, sig, plan):
+                self._entries[sig] = plan         # caller keeps a reference
+
+        class TileCache:
+            def get(self, k):
+                return self._tiles[k]             # direct store read
+    """, rules=["RPR002"])
+    lines = rule_lines(res, "RPR002")
+    assert ("cache.py", 5) in lines
+    assert ("cache.py", 8) in lines
+    assert ("cache.py", 12) in lines
+
+
+def test_rpr002_clean_and_suppressed_twins(tmp_path):
+    res = run_on(tmp_path, "cache.py", """
+        import copy
+
+        class PlanCache:
+            def get(self, sig):
+                entry = self._entries.get(sig)
+                return copy.deepcopy(entry)       # detached at the boundary
+
+            def put(self, sig, plan):
+                self._entries[sig] = detach(plan)
+
+        class ProgramCache:
+            def get(self, key):
+                fn = self._entries.get(key)
+                # repro: ignore[RPR002] -- compiled XLA callables are immutable
+                return fn
+    """, rules=["RPR002"])
+    assert rule_lines(res, "RPR002") == []
+    assert len(res.suppressed) == 1
+
+
+# --------------------------------------------------------------------------
+# RPR003 bench-parity (the PR 5 kernel_bench bug, verbatim shape)
+# --------------------------------------------------------------------------
+
+PR5_BUG = """
+    import jax, time
+    from repro.kernels import ref
+    from repro.kernels.join_count import join_count
+
+    def _time(fn, *args, n=5):
+        fn(*args)
+        t0 = time.perf_counter()
+        for _ in range(n):
+            jax.block_until_ready(fn(*args))
+        return (time.perf_counter() - t0) / n
+
+    def run():
+        t_ref = _time(jax.jit(ref.join_count_ref), 1, 2, 3)
+        t_pal = _time(lambda *x: join_count(*x), 1, 2, 3)   # bare lambda!
+        return t_ref, t_pal
+"""
+
+
+def test_rpr003_fires_on_the_pr5_bug(tmp_path):
+    res = run_on(tmp_path, "benchmarks/kernel_bench.py", PR5_BUG,
+                 rules=["RPR003"])
+    assert rule_lines(res, "RPR003") == [("benchmarks/kernel_bench.py", 15)]
+
+
+def test_rpr003_reintroducing_the_pr5_bug_fails_the_gate(tmp_path):
+    """Acceptance: the deliberate bench-parity bug makes the lint gate exit 1."""
+    bench = tmp_path / "benchmarks"
+    bench.mkdir()
+    (bench / "kernel_bench.py").write_text(textwrap.dedent(PR5_BUG))
+    rc = cli_main([str(bench), "--root", str(tmp_path), "--no-baseline"])
+    assert rc == 1
+
+
+def test_rpr003_clean_twin_both_jitted(tmp_path):
+    res = run_on(tmp_path, "benchmarks/kernel_bench.py", """
+        import jax
+
+        def run():
+            jit_ref = jax.jit(reference)
+            jit_pal = jax.jit(kernel)
+            t_ref = _time(jit_ref, 1)
+            t_pal = _time(jit_pal, 1)
+            t_fac = _time(program(params), 1)    # prepared factory: no verdict
+            return t_ref, t_pal, t_fac
+    """, rules=["RPR003"])
+    assert rule_lines(res, "RPR003") == []
+
+
+def test_rpr003_ignores_non_bench_files(tmp_path):
+    res = run_on(tmp_path, "src/somelib.py", PR5_BUG, rules=["RPR003"])
+    assert rule_lines(res, "RPR003") == []
+
+
+# --------------------------------------------------------------------------
+# RPR004 recompile-hazard
+# --------------------------------------------------------------------------
+
+def test_rpr004_fires_on_loop_jit_immediate_jit_and_lru(tmp_path):
+    res = run_on(tmp_path, "mod.py", """
+        import functools, jax
+        import jax.numpy as jnp
+
+        def sweep(shapes):
+            for n in shapes:
+                fn = jax.jit(lambda x: x * n)     # fresh wrapper per pass
+                fn(n)
+
+        def once(x):
+            return jax.jit(lambda y: y + 1)(x)    # build-and-discard
+
+        @functools.lru_cache(maxsize=64)
+        def build_program(params):
+            return jax.jit(lambda x: jnp.dot(x, x) * params[0])
+    """, rules=["RPR004"])
+    lines = rule_lines(res, "RPR004")
+    assert ("mod.py", 7) in lines
+    assert ("mod.py", 11) in lines
+    assert ("mod.py", 13) in lines       # anchored at the @lru_cache decorator
+
+
+def test_rpr004_clean_twins(tmp_path):
+    res = run_on(tmp_path, "mod.py", """
+        import functools, jax
+
+        jit_fn = jax.jit(lambda x: x * 2)         # bound once at module scope
+
+        def sweep(shapes):
+            for n in shapes:
+                jit_fn(n)                         # reused wrapper: fine
+
+        @functools.lru_cache(maxsize=8)
+        def parse_config(text):
+            return text.split(",")                # no jax in sight: fine
+    """, rules=["RPR004"])
+    assert rule_lines(res, "RPR004") == []
+
+
+# --------------------------------------------------------------------------
+# RPR005 x64-discipline
+# --------------------------------------------------------------------------
+
+def test_rpr005_fires_outside_enable_x64_in_kernels(tmp_path):
+    res = run_on(tmp_path, "src/repro/kernels/k.py", """
+        import jax.numpy as jnp
+
+        def price(x):
+            return jnp.asarray(x, jnp.float64)    # silently f32 without x64
+    """, rules=["RPR005"])
+    assert rule_lines(res, "RPR005") == [("src/repro/kernels/k.py", 5)]
+
+
+def test_rpr005_clean_twins(tmp_path):
+    res = run_on(tmp_path, "src/repro/kernels/k.py", """
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        from jax.experimental import enable_x64
+
+        def lexical(x):
+            with enable_x64():
+                return jnp.asarray(x, jnp.float64)
+
+        def guarded(x):
+            def run():
+                return jnp.asarray(x, jnp.float64)
+            if jax.config.jax_enable_x64:
+                return run()
+            with enable_x64():
+                return run()
+
+        def host(x):
+            return np.zeros(x, np.float64)        # numpy is always 64-bit
+    """, rules=["RPR005"])
+    assert rule_lines(res, "RPR005") == []
+
+
+def test_rpr005_does_not_apply_outside_kernels(tmp_path):
+    res = run_on(tmp_path, "src/repro/core/m.py", """
+        import jax.numpy as jnp
+
+        def f(x):
+            return jnp.asarray(x, jnp.float64)
+    """, rules=["RPR005"])
+    assert rule_lines(res, "RPR005") == []
+
+
+# --------------------------------------------------------------------------
+# Hygiene rules + suppression mechanics
+# --------------------------------------------------------------------------
+
+def test_hygiene_rules_fire(tmp_path):
+    res = run_on(tmp_path, "src/lib.py", """
+        def f(x, acc=[]):
+            acc.append(x)
+            return acc
+
+        def g():
+            try:
+                risky()
+            except Exception:
+                pass
+
+        def h(n):
+            assert n > 0
+            return n
+    """, rules=["RPR101", "RPR102", "RPR103"])
+    assert rule_lines(res, "RPR101") == [("src/lib.py", 2)]
+    assert rule_lines(res, "RPR102") == [("src/lib.py", 9)]
+    assert rule_lines(res, "RPR103") == [("src/lib.py", 13)]
+
+
+def test_broad_except_with_reraise_is_clean(tmp_path):
+    res = run_on(tmp_path, "src/lib.py", """
+        def g():
+            try:
+                risky()
+            except Exception as exc:
+                log(exc)
+                raise
+    """, rules=["RPR102"])
+    assert rule_lines(res, "RPR102") == []
+
+
+def test_asserts_in_tests_and_benchmarks_are_exempt(tmp_path):
+    code = "def t():\n    assert 1 > 0\n"
+    res_t = run_on(tmp_path, "tests/test_x.py", code, rules=["RPR103"])
+    assert rule_lines(res_t, "RPR103") == []
+    res_b = run_on(tmp_path, "benchmarks/b.py", code, rules=["RPR103"])
+    assert rule_lines(res_b, "RPR103") == []
+
+
+def test_reasonless_suppression_is_rpr100_and_does_not_silence(tmp_path):
+    res = run_on(tmp_path, "src/lib.py", """
+        def f(x, acc=[]):  # repro: ignore[RPR101]
+            return acc
+    """)
+    rules = {f.rule for f in res.findings}
+    assert "RPR100" in rules             # the malformed suppression itself
+    assert "RPR101" in rules             # ...which silenced nothing
+    assert res.suppressed == []
+
+
+def test_multiline_reason_suppression_covers_next_code_line(tmp_path):
+    res = run_on(tmp_path, "src/lib.py", """
+        def f(x,
+              # repro: ignore[RPR101] -- registry shared by design: the dict is
+              # the module-level singleton every caller mutates deliberately
+              acc={}):
+            return acc
+    """, rules=["RPR101"])
+    assert rule_lines(res, "RPR101") == []
+    assert len(res.suppressed) == 1
+
+
+# --------------------------------------------------------------------------
+# Fingerprints + baseline workflow
+# --------------------------------------------------------------------------
+
+def test_fingerprint_stable_under_unrelated_edits(tmp_path):
+    code = """
+        def f(x, acc=[]):
+            return acc
+    """
+    fp1 = run_on(tmp_path, "src/a.py", code).findings[0].fingerprint
+    shifted = "\n\n# a new header comment\n" + textwrap.dedent(code)
+    (tmp_path / "src/a.py").write_text(shifted)
+    res2 = analyze_paths([str(tmp_path)], root=str(tmp_path))
+    assert [f.fingerprint for f in res2.findings] == [fp1]
+
+
+def test_baseline_roundtrip_new_and_stale(tmp_path):
+    res = run_on(tmp_path, "src/a.py", """
+        def f(x, acc=[]):
+            return acc
+    """)
+    bl_path = tmp_path / "baseline.json"
+    write_baseline(str(bl_path), res)
+    baseline = load_baseline(str(bl_path))
+    new, stale = diff_baseline(res, baseline)
+    assert new == [] and stale == []
+    # a second finding is NEW against the old baseline
+    (tmp_path / "src/a.py").write_text(
+        "def f(x, acc=[]):\n    return acc\n\ndef g(y, acc2={}):\n    return acc2\n")
+    res2 = analyze_paths([str(tmp_path)], root=str(tmp_path))
+    new2, stale2 = diff_baseline(res2, baseline)
+    assert len(new2) == 1 and stale2 == []
+    # fixing the original finding leaves a STALE baseline entry
+    (tmp_path / "src/a.py").write_text("def f(x, acc=None):\n    return acc\n")
+    res3 = analyze_paths([str(tmp_path)], root=str(tmp_path))
+    new3, stale3 = diff_baseline(res3, baseline)
+    assert new3 == [] and len(stale3) == 1
+
+
+def test_write_baseline_carries_reasons_forward(tmp_path):
+    res = run_on(tmp_path, "src/a.py", "def f(x, acc=[]):\n    return acc\n")
+    bl_path = tmp_path / "baseline.json"
+    entries = write_baseline(str(bl_path), res)
+    fp = next(iter(entries))
+    baseline = load_baseline(str(bl_path))
+    baseline[fp]["reason"] = "reviewed: harmless in this context"
+    entries2 = write_baseline(str(bl_path), res, baseline)
+    assert entries2[fp]["reason"] == "reviewed: harmless in this context"
+
+
+# --------------------------------------------------------------------------
+# CLI
+# --------------------------------------------------------------------------
+
+def test_cli_exit_codes_and_json(tmp_path, capsys):
+    src = tmp_path / "src"
+    src.mkdir()
+    (src / "a.py").write_text("def f(x, acc=[]):\n    return acc\n")
+    rc = cli_main([str(src), "--root", str(tmp_path), "--no-baseline",
+                   "--format", "json"])
+    payload = json.loads(capsys.readouterr().out)
+    assert rc == 1
+    assert payload["new"][0]["rule"] == "RPR101"
+    # clean tree exits 0
+    (src / "a.py").write_text("def f(x):\n    return x\n")
+    assert cli_main([str(src), "--root", str(tmp_path), "--no-baseline"]) == 0
+    capsys.readouterr()
+    # unknown rule id is a usage error
+    assert cli_main([str(src), "--rules", "RPR999"]) == 2
+
+
+def test_cli_baseline_gate(tmp_path, capsys):
+    src = tmp_path / "src"
+    src.mkdir()
+    (src / "a.py").write_text("def f(x, acc=[]):\n    return acc\n")
+    bl = tmp_path / "bl.json"
+    assert cli_main([str(src), "--root", str(tmp_path), "--baseline", str(bl),
+                     "--write-baseline"]) == 0
+    assert cli_main([str(src), "--root", str(tmp_path),
+                     "--baseline", str(bl)]) == 0
+    # fixing the finding without retiring the baseline entry is loud
+    (src / "a.py").write_text("def f(x):\n    return x\n")
+    assert cli_main([str(src), "--root", str(tmp_path),
+                     "--baseline", str(bl)]) == 1
+    out = capsys.readouterr().out
+    assert "STALE" in out
+
+
+def test_every_rpr_rule_is_registered():
+    ids = set(all_rules())
+    for required in ("RPR001", "RPR002", "RPR003", "RPR004", "RPR005",
+                     "RPR101", "RPR102", "RPR103"):
+        assert required in ids
+
+
+# --------------------------------------------------------------------------
+# End-to-end over the real tree: the committed baseline matches exactly
+# --------------------------------------------------------------------------
+
+def test_e2e_committed_baseline_matches_real_tree_exactly():
+    result = analyze_paths([str(REPO_ROOT / "src"), str(REPO_ROOT / "benchmarks")],
+                           root=str(REPO_ROOT))
+    baseline = load_baseline(str(REPO_ROOT / "analysis_baseline.json"))
+    new, stale = diff_baseline(result, baseline)
+    assert not new, "unbaselined findings (fix or re-baseline):\n" + \
+        "\n".join(f.render() for f in new)
+    assert not stale, "stale baseline entries (retire with --write-baseline):\n" + \
+        "\n".join(stale)
+    # the grandfathered set is exactly the committed one — drift in either
+    # direction (new finding, silently fixed finding) fails loudly
+    assert {f.fingerprint for f in result.findings} == set(baseline)

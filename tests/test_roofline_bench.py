@@ -1,0 +1,69 @@
+"""Fast-tier smoke test for ``benchmarks/roofline_bench.py``.
+
+The roofline table was flagged "underused" on the ROADMAP: nothing
+exercised it, so a schema drift in ``results/dryrun.json`` (or in the
+bench itself) could rot silently while ``benchmarks.run`` kept "passing"
+by printing the not-found fallback.  This pins the contract for all three
+cell states and the missing-artifact path.
+"""
+from __future__ import annotations
+
+import json
+
+from benchmarks import roofline_bench
+
+
+def _fake_results():
+    return {
+        "qwen2-0.5b|decode_8k|single": {
+            "status": "ok",
+            "compute_s": 0.004, "memory_s": 0.012, "collective_s": 0.001,
+            "bottleneck": "memory", "roofline_fraction": 0.41,
+        },
+        "odyssey-fed|fed_query|multi": {
+            "status": "ok",
+            "compute_s": 0.002, "memory_s": 0.001, "collective_s": 0.009,
+            "bottleneck": "collective", "roofline_fraction": 0.18,
+        },
+        "qwen3-14b|long_500k|single": {
+            "status": "skipped", "reason": "full attention is quadratic at 500k",
+        },
+        "phi3.5-moe|train_8k|multi": {
+            "status": "error", "error": "RESOURCE_EXHAUSTED: out of memory",
+        },
+    }
+
+
+def test_roofline_table_from_dryrun_artifact(tmp_path):
+    path = tmp_path / "dryrun.json"
+    path.write_text(json.dumps(_fake_results()))
+    csv, text = roofline_bench.run(str(path))
+
+    # one csv row per ok cell: (name, bottleneck term in us, roofline fraction)
+    names = {row[0] for row in csv}
+    assert names == {"roofline/qwen2-0.5b|decode_8k|single",
+                     "roofline/odyssey-fed|fed_query|multi"}
+    by_name = {row[0]: row for row in csv}
+    _, us, frac = by_name["roofline/qwen2-0.5b|decode_8k|single"]
+    assert us == 0.012 * 1e6              # the max term, in microseconds
+    assert frac == 0.41
+
+    # the human table carries every cell state
+    assert "memory" in text and "collective" in text
+    assert "skipped: full attention is quadratic at 500k" in text
+    assert "ERROR RESOURCE_EXHAUSTED" in text
+    assert "41.0%" in text and "18.0%" in text
+
+
+def test_roofline_missing_artifact_is_graceful(tmp_path):
+    csv, text = roofline_bench.run(str(tmp_path / "nope.json"))
+    assert csv == []
+    assert "not found" in text and "repro.launch.dryrun" in text
+
+
+def test_roofline_empty_results_yields_header_only(tmp_path):
+    path = tmp_path / "dryrun.json"
+    path.write_text("{}")
+    csv, text = roofline_bench.run(str(path))
+    assert csv == []
+    assert text.startswith("== Roofline")
