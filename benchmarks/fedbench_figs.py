@@ -113,6 +113,51 @@ def table2_statistics(scale: float = 1.0):
     return csv, "\n".join(lines)
 
 
+def extended_workload(scale: float = 1.0):
+    """Group-algebra workload (OPTIONAL / UNION / FILTER families, see
+    docs/algebra.md): plan with Odyssey, execute on the local engine, and hold
+    every query's result bit-identical to the ``naive_evaluate`` oracle.  The
+    guarded ``extended_completeness`` metric (hard floor 1.0) turns any
+    algebra-correctness regression into a CI failure."""
+    import numpy as np
+
+    from repro.core.planner import OdysseyOptimizer
+    from repro.engine.local import LocalEngine, naive_evaluate
+    from repro.rdf.generator import generate_extended_workload
+
+    fed, gt, stats, _ = fixture(scale)
+    queries = generate_extended_workload(fed, gt, seed=17)
+    opt = OdysseyOptimizer(stats)
+    eng = LocalEngine(fed)
+    rows = []
+    n_complete = 0
+    for q in queries:
+        t0 = time.perf_counter()
+        plan = opt.optimize(q)
+        ot_ms = (time.perf_counter() - t0) * 1e3
+        rel, m = eng.execute(plan)
+        proj = q.effective_projection()
+        n = len(next(iter(rel.values()))) if rel else 0
+        got = set(zip(*[rel[v].tolist() for v in proj])) if n else set()
+        want = naive_evaluate(fed, q)
+        complete = got == want
+        n_complete += complete
+        rows.append((q.name, len(want), ot_ms, m.wall_ms, plan.n_subqueries,
+                     plan.well_designed, complete))
+    frac = n_complete / max(1, len(queries))
+    lines = ["== Extended workload (OPTIONAL/UNION/FILTER vs oracle) ==",
+             f"{'query':8}{'answers':>9}{'OT ms':>9}{'ET ms':>9}{'NSQ':>5}"
+             f"{'WD':>4}{'ok':>4}"]
+    for r in rows:
+        lines.append(f"{r[0]:8}{r[1]:>9}{r[2]:>9.1f}{r[3]:>9.1f}{r[4]:>5}"
+                     f"{'y' if r[5] else 'n':>4}{'y' if r[6] else 'N':>4}")
+    lines.append(f"completeness: {n_complete}/{len(queries)}")
+    csv = [("extended/completeness", frac * 1e6, len(queries)),
+           ("extended/opt_time_ms",
+            geomean([r[2] for r in rows]) * 1e3 if rows else 0.0, "lower")]
+    return csv, "\n".join(lines), {"extended_completeness": frac}
+
+
 def cardinality_accuracy(scale: float = 1.0):
     """§3.1/3.2 running-example analog: estimation error of formulas 2/4."""
     from repro.core.cardinality import (star_cardinality_distinct,

@@ -35,6 +35,7 @@ HIGHER_IS_BETTER = {
     "stats_remove_speedup_x": True,
     "stats_refresh_speedup_x": True,
     "dp_sweep_jax_vs_numpy_x": True,
+    "extended_completeness": True,
     "peak_rss_mb": False,
 }
 
@@ -63,6 +64,9 @@ def main() -> None:
 
     add(F.table2_statistics(scale))
     add(F.cardinality_accuracy(scale))
+    # group-algebra workload: every OPTIONAL/UNION/FILTER query's plan must
+    # execute bit-identical to the oracle (guarded, hard floor 1.0)
+    add(F.extended_workload(scale))
     runs = run_all(scale)
     incomplete = [r for r in runs if not r.complete]
     tables.append(f"result completeness: {len(runs) - len(incomplete)}/{len(runs)} "

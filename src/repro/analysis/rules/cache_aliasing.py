@@ -17,6 +17,14 @@ Detection: inside a class whose name contains ``Cache`` (or ``Memo``), a
 
 Handing out genuinely immutable entries (compiled callables, tuples) is
 fine — suppress with a reason stating the immutability contract.
+
+A second check guards *detach completeness* (PR 8): modules that define a
+``PlanNode``-style class hierarchy next to copy/rename detach helpers
+(``_copy_node`` / ``_rename_node`` / ``detach``) must reference every
+subclass by name inside each helper.  When a new plan-node variant (say
+``LeftJoinPlanNode``) is added but the detach helper's dispatch chain is
+not extended, cache hits hand out trees whose new nodes alias the stored
+entry — the same corruption, one level down.
 """
 from __future__ import annotations
 
@@ -27,6 +35,11 @@ from repro.analysis.core import FileContext, Finding, Rule, register
 
 _GET_NAMES = {"get", "lookup", "fetch", "hit"}
 _PUT_NAMES = {"put", "set", "store", "add", "insert"}
+
+# detach-helper shapes: functions whose job is a per-variant deep copy of a
+# node tree; every node subclass must appear in each of them
+_DETACH_HELPER_NAMES = {"_copy_node", "_rename_node"}
+_NODE_BASE_SUFFIX = "PlanNode"
 
 
 def _is_self_store_read(node: ast.AST) -> bool:
@@ -64,6 +77,7 @@ class CacheAliasing(Rule):
                     yield from self._check_get(ctx, cls, meth)
                 elif meth.name in _PUT_NAMES:
                     yield from self._check_put(ctx, cls, meth)
+        yield from self._check_detach_completeness(ctx)
 
     def _check_get(self, ctx, cls, meth) -> Iterable[Finding]:
         tainted: set[str] = set()
@@ -88,6 +102,39 @@ class CacheAliasing(Rule):
                         "itself; a caller mutating it corrupts every later "
                         "hit — detach/deep-copy at the boundary (or suppress "
                         "with the immutability contract as the reason)")
+
+    def _check_detach_completeness(self, ctx) -> Iterable[Finding]:
+        """Every ``*PlanNode`` subclass defined in a module must be referenced
+        by name inside each of the module's detach helpers (``_copy_node`` /
+        ``_rename_node``) — an unhandled variant aliases the cached tree."""
+        base_names = {
+            cls.name for cls in ctx.tree.body
+            if isinstance(cls, ast.ClassDef) and cls.name.endswith(_NODE_BASE_SUFFIX)
+            and not any(isinstance(b, ast.Name) and
+                        b.id.endswith(_NODE_BASE_SUFFIX) for b in cls.bases)
+        }
+        subclasses = [
+            cls.name for cls in ctx.tree.body
+            if isinstance(cls, ast.ClassDef)
+            and any(isinstance(b, ast.Name) and b.id in base_names
+                    for b in cls.bases)
+        ]
+        if not subclasses:
+            return
+        for fn in ctx.tree.body:
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if fn.name not in _DETACH_HELPER_NAMES:
+                continue
+            referenced = {n.id for n in ast.walk(fn) if isinstance(n, ast.Name)}
+            for missing in subclasses:
+                if missing not in referenced:
+                    yield ctx.finding(
+                        self, fn,
+                        f"detach helper `{fn.name}` does not handle plan-node "
+                        f"variant `{missing}`; a cached tree containing one "
+                        "would be handed out aliased — extend the dispatch "
+                        "chain")
 
     def _check_put(self, ctx, cls, meth) -> Iterable[Finding]:
         params = {a.arg for a in meth.args.args[1:]}    # skip self

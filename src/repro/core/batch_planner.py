@@ -146,6 +146,26 @@ def plan_batch(optimizer, queries: "list[BGPQuery]"):
 
     # -- decompose, group by shape, select sources over the union -----------
     local: dict[tuple, CacheEntry] = {}    # owner plans when the cache is off
+
+    # Non-conjunctive (group-tree) queries bypass the stacked conjunctive
+    # pipeline: each runs the compositional planner under the same epoch
+    # snapshot and lands in the cache like any other owner, so duplicates of
+    # an OPTIONAL/UNION/FILTER template still rebind below.
+    alg = [i for i in fresh if not queries[i].is_conjunctive()]
+    if alg:
+        fresh = [i for i in fresh if queries[i].is_conjunctive()]
+        for i in alg:
+            t0 = time.perf_counter()
+            plan = optimizer._optimize_uncached(queries[i], t0)
+            plan.stats_epoch = epoch
+            plans[i] = plan
+            report.n_planned += 1
+            sig, var_order = sigs[i]
+            if cache is not None:
+                cache.put(sig, plan, var_order, epoch=epoch)
+            else:
+                local[sig] = CacheEntry(_detach_plan(plan), var_order, epoch)
+
     if fresh:
         t_shared = time.perf_counter()
         graphs = {i: decompose(queries[i]) for i in fresh}

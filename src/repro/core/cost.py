@@ -21,6 +21,18 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+# cross-*block* join selectivity: blocks (conjunctive cores of the group
+# tree) join on shared variables the CS/CP statistics do not describe, so
+# each shared variable contributes this generic factor — the same fallback
+# ``repro.core.join_order`` uses for non object->subject edges inside a BGP
+CROSS_BLOCK_SELECTIVITY = 1e-3
+
+# filter selectivity priors (System-R style): equality is selective,
+# inequality keeps about a third, disequality drops almost nothing
+FILTER_EQ_SELECTIVITY = 0.1
+FILTER_NEQ_SELECTIVITY = 0.9
+FILTER_RANGE_SELECTIVITY = 1.0 / 3.0
+
 
 @dataclass
 class CostModel:
@@ -57,6 +69,63 @@ class CostModel:
         return (self.request_cost * n_req
                 + self.transfer_weight * card_out * self.src_w(right_sources)
                 + self.intermediate_weight * card_out)
+
+    # -- group-tree composition (OPTIONAL / UNION / FILTER plan nodes) -------
+    # Blocks (conjunctive cores) are priced by the DP above; these forms
+    # compose block estimates through the non-conjunctive operators so the
+    # extended plans stay measurable end to end (docs/algebra.md).
+
+    def cross_join_card(self, card_a: float, card_b: float,
+                        n_shared_vars: int) -> float:
+        """Cardinality of joining two planned blocks: independence times a
+        generic per-shared-variable selectivity (cartesian when disjoint)."""
+        sel = CROSS_BLOCK_SELECTIVITY ** n_shared_vars
+        return card_a * card_b * sel
+
+    def left_join_card(self, card_left: float, card_join: float) -> float:
+        """OPTIONAL output estimate: the join estimate plus the unmatched-left
+        surplus — every left row survives, matched or not."""
+        return card_join + max(0.0, card_left - card_join)
+
+    def union_card(self, cards: "list[float]") -> float:
+        """UNION output estimate: branches are disjoint alternatives."""
+        return float(sum(cards))
+
+    def filter_selectivity(self, expr) -> float:
+        """Selectivity prior of a filter expression (recursive over the
+        ``repro.query.algebra`` Expr tree; conjunction multiplies, disjunction
+        is inclusion-exclusion under independence, negation complements)."""
+        from repro.query.algebra import And, Comparison, Not, Or
+
+        if isinstance(expr, Comparison):
+            if expr.op == "=":
+                return FILTER_EQ_SELECTIVITY
+            if expr.op == "!=":
+                return FILTER_NEQ_SELECTIVITY
+            return FILTER_RANGE_SELECTIVITY
+        if isinstance(expr, And):
+            s = 1.0
+            for p in expr.parts:
+                s *= self.filter_selectivity(p)
+            return s
+        if isinstance(expr, Or):
+            s = 1.0
+            for p in expr.parts:
+                s *= 1.0 - self.filter_selectivity(p)
+            return 1.0 - s
+        assert isinstance(expr, Not)
+        return 1.0 - self.filter_selectivity(expr.part)
+
+    def left_join_cost(self, card_out: float) -> float:
+        """Both inputs already costed; the outer join materializes the
+        matched-plus-surplus output like a hash join does."""
+        return self.intermediate_weight * card_out
+
+    def union_cost(self, card_out: float) -> float:
+        return self.intermediate_weight * card_out
+
+    def filter_cost(self, card_out: float) -> float:
+        return self.intermediate_weight * card_out
 
     # -- vectorized forms (arrays of candidates at once) ---------------------
 

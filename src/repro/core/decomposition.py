@@ -70,8 +70,16 @@ class StarGraph:
 
 
 def decompose(query: BGPQuery) -> StarGraph:
+    return decompose_patterns(query.patterns, query)
+
+
+def decompose_patterns(patterns: list[TriplePattern],
+                       query: BGPQuery | None = None) -> StarGraph:
+    """Star decomposition of one conjunctive pattern block.  ``decompose``
+    is the whole-query form; the group-tree planner calls this per ``Bgp``
+    block of the normalized algebra (each block is its own star graph)."""
     by_subject: dict[object, list[TriplePattern]] = {}
-    for tp in query.patterns:
+    for tp in patterns:
         key = tp.s  # Var/Const are frozen dataclasses -> hashable
         by_subject.setdefault(key, []).append(tp)
     stars = [Star(i, subj, pats) for i, (subj, pats) in enumerate(by_subject.items())]

@@ -34,7 +34,7 @@ from collections import OrderedDict
 from dataclasses import dataclass, field, replace
 
 from repro.core.cost import CostModel
-from repro.core.decomposition import StarGraph, decompose
+from repro.core.decomposition import StarGraph, decompose, decompose_patterns
 from repro.core.federation import FederatedStats
 from repro.core.join_order import (
     DP_BACKENDS,
@@ -42,8 +42,33 @@ from repro.core.join_order import (
     dp_join_order,
     order_star_patterns,
 )
-from repro.core.source_selection import SourceSelection, select_sources
-from repro.query.algebra import BGPQuery, Const, Term, TriplePattern, Var
+from repro.core.source_selection import (
+    SourceSelection,
+    concat_selections,
+    select_sources,
+)
+from repro.query.algebra import (
+    And,
+    BGPQuery,
+    Bgp,
+    Comparison,
+    Const,
+    Expr,
+    Filter,
+    GroupNode,
+    Join,
+    LeftJoin,
+    Not,
+    Or,
+    Term,
+    TriplePattern,
+    Union,
+    Var,
+    expr_variables,
+    group_variables,
+    is_well_designed,
+    normalize,
+)
 
 
 @dataclass
@@ -72,6 +97,37 @@ class JoinPlanNode(PlanNode):
 
 
 @dataclass
+class LeftJoinPlanNode(PlanNode):
+    """OPTIONAL: every left row survives; right columns are UNDEF where the
+    arm found no match.  Child order is semantic (never commuted)."""
+
+    left: PlanNode
+    right: PlanNode
+    join_vars: list[str] = field(default_factory=list)
+    est_cardinality: float = 0.0
+
+
+@dataclass
+class UnionPlanNode(PlanNode):
+    """UNION: outer union of the children's results, schemas aligned with
+    UNDEF padding."""
+
+    children: list[PlanNode] = field(default_factory=list)
+    est_cardinality: float = 0.0
+
+
+@dataclass
+class FilterPlanNode(PlanNode):
+    """FILTER over the child's rows.  The normalization pass places these at
+    the deepest point where the expression's variables are certainly bound,
+    so the engine evaluates them as early as possible."""
+
+    expr: Expr
+    child: PlanNode
+    est_cardinality: float = 0.0
+
+
+@dataclass
 class PhysicalPlan:
     root: PlanNode
     query: BGPQuery
@@ -81,6 +137,7 @@ class PhysicalPlan:
     fallback: bool = False                   # variable-predicate fallback
     cached: bool = False                     # served from the plan cache
     stats_epoch: int = 0                     # statistics epoch it was planned under
+    well_designed: bool = True               # OPTIONAL reordering was licensed
 
     def subqueries(self) -> list[SubqueryNode]:
         out: list[SubqueryNode] = []
@@ -88,9 +145,14 @@ class PhysicalPlan:
         def walk(n: PlanNode) -> None:
             if isinstance(n, SubqueryNode):
                 out.append(n)
-            elif isinstance(n, JoinPlanNode):
+            elif isinstance(n, (JoinPlanNode, LeftJoinPlanNode)):
                 walk(n.left)
                 walk(n.right)
+            elif isinstance(n, UnionPlanNode):
+                for c in n.children:
+                    walk(c)
+            elif isinstance(n, FilterPlanNode):
+                walk(n.child)
 
         walk(self.root)
         return out
@@ -121,6 +183,13 @@ def query_signature(query: BGPQuery) -> tuple[tuple, tuple[str, ...]]:
     Queries differing in any constant, in DISTINCT, or in pattern order get
     distinct signatures; the projection does not affect the plan shape and is
     re-attached from the incoming query on a hit.
+
+    A query carrying a group tree (``query.root``) is hashed over the *full
+    algebra*: node kinds, filter expressions, and child order (LeftJoin child
+    order is semantic).  The degenerate ``root is None`` case keeps the
+    legacy flat-pattern signature bit-for-bit, and the algebra signatures
+    live under a distinct ``"alg"`` tag — an OPTIONAL/UNION/FILTER variant
+    of a template can never alias its plain-BGP cache entry.
     """
     names: dict[str, int] = {}
 
@@ -130,9 +199,41 @@ def query_signature(query: BGPQuery) -> tuple[tuple, tuple[str, ...]]:
         assert isinstance(t, Var)
         return ("v", names.setdefault(t.name, len(names)))
 
-    pats = tuple((term_key(tp.s), term_key(tp.p), term_key(tp.o))
-                 for tp in query.patterns)
-    return (pats, bool(query.distinct)), tuple(names)
+    if query.root is None:
+        pats = tuple((term_key(tp.s), term_key(tp.p), term_key(tp.o))
+                     for tp in query.patterns)
+        return (pats, bool(query.distinct)), tuple(names)
+
+    def expr_key(e: Expr) -> tuple:
+        if isinstance(e, Comparison):
+            return ("cmp", e.op, term_key(e.lhs), term_key(e.rhs))
+        if isinstance(e, (And, Or)):
+            tag = "and" if isinstance(e, And) else "or"
+            return (tag, tuple(expr_key(p) for p in e.parts))
+        assert isinstance(e, Not)
+        return ("not", expr_key(e.part))
+
+    def node_key(n: GroupNode) -> tuple:
+        if isinstance(n, Bgp):
+            return ("bgp", tuple((term_key(tp.s), term_key(tp.p),
+                                  term_key(tp.o)) for tp in n.patterns))
+        if isinstance(n, Join):
+            return ("join", tuple(node_key(c) for c in n.children))
+        if isinstance(n, LeftJoin):
+            return ("leftjoin", node_key(n.left), node_key(n.right))
+        if isinstance(n, Union):
+            return ("union", tuple(node_key(m) for m in n.members))
+        assert isinstance(n, Filter)
+        return ("filter", expr_key(n.expr), node_key(n.child))
+
+    sig = ("alg", node_key(query.root))
+    # filter-only variables may trail the pattern variables; make sure every
+    # query variable has a canonical index so rebinding can rename the tree
+    for tp in query.patterns:
+        for t in (tp.s, tp.p, tp.o):
+            if isinstance(t, Var):
+                names.setdefault(t.name, len(names))
+    return (sig, bool(query.distinct)), tuple(names)
 
 
 @dataclass
@@ -211,11 +312,25 @@ def _copy_node(node: PlanNode) -> PlanNode:
     """Fresh plan tree with fresh mutable fields.  Cached plans must never
     share their ``root`` with plans handed to callers: engines and callers
     adjust ``est_cardinality`` / ``sources`` in place, which would silently
-    corrupt every later cache hit."""
+    corrupt every later cache hit.  Every ``PlanNode`` variant must be
+    handled here — an unhandled variant would alias the stored entry
+    (RPR002 checks this mechanically)."""
     if isinstance(node, SubqueryNode):
         return SubqueryNode(stars=list(node.stars), patterns=list(node.patterns),
                             sources=list(node.sources),
                             est_cardinality=node.est_cardinality)
+    if isinstance(node, LeftJoinPlanNode):
+        return LeftJoinPlanNode(left=_copy_node(node.left),
+                                right=_copy_node(node.right),
+                                join_vars=list(node.join_vars),
+                                est_cardinality=node.est_cardinality)
+    if isinstance(node, UnionPlanNode):
+        return UnionPlanNode(children=[_copy_node(c) for c in node.children],
+                             est_cardinality=node.est_cardinality)
+    if isinstance(node, FilterPlanNode):
+        # Expr trees are frozen dataclasses (immutable): shared by contract
+        return FilterPlanNode(expr=node.expr, child=_copy_node(node.child),
+                              est_cardinality=node.est_cardinality)
     assert isinstance(node, JoinPlanNode)
     return JoinPlanNode(left=_copy_node(node.left), right=_copy_node(node.right),
                         strategy=node.strategy, join_vars=list(node.join_vars),
@@ -226,6 +341,17 @@ def _rename_term(t: Term, ren: dict[str, str]) -> Term:
     return Var(ren[t.name]) if isinstance(t, Var) else t
 
 
+def _rename_expr(e: Expr, ren: dict[str, str]) -> Expr:
+    if isinstance(e, Comparison):
+        return Comparison(e.op, _rename_term(e.lhs, ren), _rename_term(e.rhs, ren))
+    if isinstance(e, And):
+        return And(tuple(_rename_expr(p, ren) for p in e.parts))
+    if isinstance(e, Or):
+        return Or(tuple(_rename_expr(p, ren) for p in e.parts))
+    assert isinstance(e, Not)
+    return Not(_rename_expr(e.part, ren))
+
+
 def _rename_node(node: PlanNode, ren: dict[str, str]) -> PlanNode:
     if isinstance(node, SubqueryNode):
         pats = [TriplePattern(_rename_term(tp.s, ren), _rename_term(tp.p, ren),
@@ -233,12 +359,45 @@ def _rename_node(node: PlanNode, ren: dict[str, str]) -> PlanNode:
         return SubqueryNode(stars=list(node.stars), patterns=pats,
                             sources=list(node.sources),
                             est_cardinality=node.est_cardinality)
+    if isinstance(node, LeftJoinPlanNode):
+        return LeftJoinPlanNode(left=_rename_node(node.left, ren),
+                                right=_rename_node(node.right, ren),
+                                join_vars=sorted(ren[v] for v in node.join_vars),
+                                est_cardinality=node.est_cardinality)
+    if isinstance(node, UnionPlanNode):
+        return UnionPlanNode(children=[_rename_node(c, ren)
+                                       for c in node.children],
+                             est_cardinality=node.est_cardinality)
+    if isinstance(node, FilterPlanNode):
+        return FilterPlanNode(expr=_rename_expr(node.expr, ren),
+                              child=_rename_node(node.child, ren),
+                              est_cardinality=node.est_cardinality)
     assert isinstance(node, JoinPlanNode)
     return JoinPlanNode(left=_rename_node(node.left, ren),
                         right=_rename_node(node.right, ren),
                         strategy=node.strategy,
                         join_vars=sorted(ren[v] for v in node.join_vars),
                         est_cardinality=node.est_cardinality)
+
+
+def _rename_graph(graph: StarGraph, ren: dict[str, str]) -> StarGraph:
+    """Rename the variables of a (detached) star graph in place of
+    re-decomposing: algebra plans concatenate per-block graphs, a shape
+    ``decompose(query)`` cannot reproduce."""
+    from repro.core.decomposition import Edge, Star
+
+    def rn_tp(tp: TriplePattern) -> TriplePattern:
+        return TriplePattern(_rename_term(tp.s, ren), _rename_term(tp.p, ren),
+                             _rename_term(tp.o, ren))
+
+    stars = [Star(s.idx, _rename_term(s.subject, ren), [rn_tp(tp) for tp in s.patterns])
+             for s in graph.stars]
+    edges = [Edge(src=e.src, dst=e.dst, pred=e.pred,
+                  pattern=rn_tp(e.pattern) if e.pattern is not None else None,
+                  generic=e.generic,
+                  var=ren.get(e.var, e.var) if e.var is not None else None)
+             for e in graph.edges]
+    return StarGraph(stars=stars, edges=edges, query=graph.query)
 
 
 class OdysseyOptimizer:
@@ -302,6 +461,8 @@ class OdysseyOptimizer:
         return plan_batch(self, queries)
 
     def _optimize_uncached(self, query: BGPQuery, t0: float) -> PhysicalPlan:
+        if not query.is_conjunctive():
+            return self._optimize_algebra(query, t0)
         graph = decompose(query)
         sel = select_sources(graph, self.stats)
         tree = dp_join_order(graph, self.stats, sel, self.cost_model, query.distinct,
@@ -313,6 +474,80 @@ class OdysseyOptimizer:
         plan.fallback = any(s.has_var_pred for s in graph.stars)
         plan.optimization_ms = (time.perf_counter() - t0) * 1e3
         return plan
+
+    # -- group-tree (OPTIONAL / UNION / FILTER) planning --------------------
+    def _optimize_algebra(self, query: BGPQuery, t0: float) -> PhysicalPlan:
+        """Compositional planning over the normalized group tree: each ``Bgp``
+        block runs the unchanged conjunctive pipeline (star decomposition →
+        source selection → bitmask DP → emission), and the blocks are composed
+        with LeftJoin/Union/Filter plan nodes costed by ``CostModel``.  The
+        plan-level graph/selection concatenate the per-block results so NSS
+        and source-failover keep working on extended plans."""
+        root_alg = normalize(query.algebra())
+        graphs: list[StarGraph] = []
+        sels: list[SourceSelection] = []
+        root = self._plan_group(root_alg, query, graphs, sels)
+        graph, sel = concat_selections(graphs, sels, query)
+        plan = PhysicalPlan(root=root, query=query, graph=graph, selection=sel,
+                            stats_epoch=self.stats_epoch,
+                            well_designed=is_well_designed(root_alg))
+        plan.fallback = any(s.has_var_pred for s in graph.stars)
+        plan.optimization_ms = (time.perf_counter() - t0) * 1e3
+        return plan
+
+    def _plan_group(self, node: GroupNode, query: BGPQuery,
+                    graphs: "list[StarGraph]",
+                    sels: "list[SourceSelection]") -> PlanNode:
+        cm = self.cost_model
+        if isinstance(node, Bgp):
+            if not node.patterns:
+                raise ValueError(
+                    "empty group pattern (e.g. a bare OPTIONAL) is not "
+                    "supported — every group needs at least one triple pattern")
+            block = decompose_patterns(list(node.patterns), query)
+            sel = select_sources(block, self.stats)
+            tree = dp_join_order(block, self.stats, sel, cm, query.distinct,
+                                 block_bytes=self.dp_block_bytes,
+                                 dp_backend=self.dp_backend)
+            planned = self._emit(tree, block, sel, query)
+            soff = sum(len(g.stars) for g in graphs)
+            if soff:
+                _offset_stars(planned, soff)
+            graphs.append(block)
+            sels.append(sel)
+            return planned
+        if isinstance(node, Join):
+            children = [self._plan_group(c, query, graphs, sels)
+                        for c in node.children]
+            # left-deep, cheapest block first (stable: ties keep group order)
+            children.sort(key=lambda n: n.est_cardinality)
+            cur = children[0]
+            for nxt in children[1:]:
+                shared = sorted(_vars_of(cur) & _vars_of(nxt))
+                card = cm.cross_join_card(cur.est_cardinality,
+                                          nxt.est_cardinality, len(shared))
+                cur = JoinPlanNode(left=cur, right=nxt, strategy="hash",
+                                   join_vars=shared, est_cardinality=card)
+            return cur
+        if isinstance(node, LeftJoin):
+            left = self._plan_group(node.left, query, graphs, sels)
+            right = self._plan_group(node.right, query, graphs, sels)
+            shared = sorted(_vars_of(left) & _vars_of(right))
+            card_join = cm.cross_join_card(left.est_cardinality,
+                                           right.est_cardinality, len(shared))
+            return LeftJoinPlanNode(
+                left=left, right=right, join_vars=shared,
+                est_cardinality=cm.left_join_card(left.est_cardinality,
+                                                  card_join))
+        if isinstance(node, Union):
+            children = [self._plan_group(m, query, graphs, sels)
+                        for m in node.members]
+            card = cm.union_card([c.est_cardinality for c in children])
+            return UnionPlanNode(children=children, est_cardinality=card)
+        assert isinstance(node, Filter)
+        child = self._plan_group(node.child, query, graphs, sels)
+        card = child.est_cardinality * cm.filter_selectivity(node.expr)
+        return FilterPlanNode(expr=node.expr, child=child, est_cardinality=card)
 
     def _rebind(self, entry: CacheEntry, var_order: tuple[str, ...],
                 query: BGPQuery) -> PhysicalPlan:
@@ -332,7 +567,14 @@ class OdysseyOptimizer:
                            stats_epoch=entry.epoch)
         ren = dict(zip(cached_order, var_order))
         root = _rename_node(cached.root, ren)
-        return replace(cached, root=root, query=query, graph=decompose(query),
+        if query.root is None:
+            graph = decompose(query)
+        else:
+            # algebra plans concatenate per-block star graphs — a shape
+            # decompose(query) cannot rebuild — so rename the cached one
+            graph = _rename_graph(cached.graph, ren)
+            graph.query = query
+        return replace(cached, root=root, query=query, graph=graph,
                        selection=cached.selection.detach(), cached=True,
                        stats_epoch=entry.epoch)
 
@@ -361,5 +603,24 @@ def _vars_of(node: PlanNode) -> set[str]:
         for tp in node.patterns:
             out |= set(tp.variables())
         return out
+    if isinstance(node, (JoinPlanNode, LeftJoinPlanNode)):
+        return _vars_of(node.left) | _vars_of(node.right)
+    if isinstance(node, UnionPlanNode):
+        out = set()
+        for c in node.children:
+            out |= _vars_of(c)
+        return out
+    assert isinstance(node, FilterPlanNode)
+    return _vars_of(node.child) | set(expr_variables(node.expr))
+
+
+def _offset_stars(node: PlanNode, off: int) -> None:
+    """Shift the star indices of one planned block so they index into the
+    concatenated plan-level graph (``concat_selections``).  Block trees only
+    contain Subquery/Join nodes — composition nodes are added above them."""
+    if isinstance(node, SubqueryNode):
+        node.stars = [s + off for s in node.stars]
+        return
     assert isinstance(node, JoinPlanNode)
-    return _vars_of(node.left) | _vars_of(node.right)
+    _offset_stars(node.left, off)
+    _offset_stars(node.right, off)

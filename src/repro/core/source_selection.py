@@ -228,6 +228,41 @@ def select_sources(graph: StarGraph, stats: FederatedStats,
     return sel
 
 
+def concat_selections(graphs: "list[StarGraph]",
+                      sels: "list[SourceSelection]",
+                      query=None) -> "tuple[StarGraph, SourceSelection]":
+    """Concatenate per-block star graphs and selections into one plan-level
+    (graph, selection) pair with stars/edges reindexed by block offset.
+
+    The group-tree planner decomposes and selects each conjunctive block
+    independently; ``PhysicalPlan.graph``/``selection`` (the NSS metric,
+    failover's source exclusion) want one object covering the whole query.
+    Containers are fresh (``detach``-grade) so the blocks' own selections
+    are not aliased."""
+    stars: list[Star] = []
+    edges: list = []
+    star_sources: list[list[int]] = []
+    star_cs: list[dict[int, np.ndarray]] = []
+    edge_pairs: dict[int, set[tuple[int, int]]] = {}
+    soff = eoff = 0
+    for g, sel in zip(graphs, sels):
+        for s in g.stars:
+            stars.append(Star(s.idx + soff, s.subject, list(s.patterns)))
+        for e in g.edges:
+            edges.append(type(e)(src=e.src + soff, dst=e.dst + soff,
+                                 pred=e.pred, pattern=e.pattern,
+                                 generic=e.generic, var=e.var))
+        star_sources.extend(list(x) for x in sel.star_sources)
+        star_cs.extend(dict(x) for x in sel.star_cs)
+        for ei, pairs in sel.edge_pairs.items():
+            edge_pairs[ei + eoff] = set(pairs)
+        soff += len(g.stars)
+        eoff += len(g.edges)
+    graph = StarGraph(stars=stars, edges=edges, query=query)
+    return graph, SourceSelection(star_sources=star_sources, star_cs=star_cs,
+                                  edge_pairs=edge_pairs)
+
+
 def select_sources_batch(graphs: "list[StarGraph]", stats: FederatedStats,
                          memo: SelectionMemo | None = None,
                          ) -> "list[SourceSelection]":

@@ -286,7 +286,11 @@ class DistributedEngine:
             # exclusive group ("single SPARQL query to one endpoint", §3.4):
             # evaluate each star then join; rows stay within the source.
             return self._join_merged_leaf(node, metrics)
-        assert isinstance(node, JoinPlanNode)
+        if not isinstance(node, JoinPlanNode):
+            raise NotImplementedError(
+                f"the SPMD engine executes conjunctive (Subquery/Join) plans "
+                f"only; got {type(node).__name__} — run OPTIONAL/UNION/FILTER "
+                "plans on repro.engine.local.LocalEngine")
         left = self._eval_node(node.left, metrics)
         right = self._eval_node(node.right, metrics)
         return self._join(left, right, node.join_vars, metrics)

@@ -12,11 +12,42 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.planner import JoinPlanNode, PhysicalPlan, PlanNode, SubqueryNode
-from repro.query.algebra import BGPQuery, Const, TriplePattern, Var
+from repro.core.planner import (
+    FilterPlanNode,
+    JoinPlanNode,
+    LeftJoinPlanNode,
+    PhysicalPlan,
+    PlanNode,
+    SubqueryNode,
+    UnionPlanNode,
+)
+from repro.query.algebra import (
+    And,
+    BGPQuery,
+    Bgp,
+    Comparison,
+    Const,
+    Expr,
+    Filter,
+    GroupNode,
+    Join,
+    LeftJoin,
+    Not,
+    Or,
+    TriplePattern,
+    Union,
+    Var,
+)
 from repro.rdf.dataset import Federation, Source
 
 Relation = dict[str, np.ndarray]  # same-length columns keyed by var name
+
+# Unbound marker inside int32 relation columns (term ids are non-negative).
+# OPTIONAL pads unmatched right columns and UNION pads schema gaps with it;
+# comparisons involving it are false (two-valued FILTER semantics, see
+# docs/algebra.md).  Normalization's well-designed check guarantees a
+# possibly-UNDEF variable never becomes a join key of a reordered plan.
+UNDEF = int(np.int32(-1))
 
 
 def _empty(vars_: "list[str]") -> Relation:
@@ -51,6 +82,51 @@ def _dedup(rel: Relation) -> Relation:
     stacked = np.stack([rel[k].astype(np.int64) for k in keys], axis=1)
     _, idx = np.unique(stacked, axis=0, return_index=True)
     return {k: rel[k][np.sort(idx)] for k in rel}
+
+
+def _outer_union(rels: "list[Relation]") -> Relation:
+    """UNION of possibly different-schema relations: the output schema is the
+    union of the inputs' variables, missing columns padded with UNDEF."""
+    allvars = sorted(set().union(*[set(r) for r in rels])) if rels else []
+    parts: list[Relation] = []
+    for r in rels:
+        n = _nrows(r)
+        parts.append({v: (r[v] if v in r else np.full(n, UNDEF, np.int32))
+                      for v in allvars})
+    return _concat(parts)
+
+
+def filter_mask(expr: Expr, rel: Relation) -> np.ndarray:
+    """Row mask of ``expr`` over ``rel`` — the one FILTER evaluator, shared by
+    the engine, the oracle and the tests.  Two-valued semantics: a comparison
+    whose side is unbound (a missing column or an UNDEF cell) is false, ``!``
+    is plain negation, and ordering comparisons are over term ids."""
+    n = _nrows(rel)
+
+    def col(t) -> np.ndarray:
+        if isinstance(t, Const):
+            return np.full(n, t.tid, np.int64)
+        c = rel.get(t.name)
+        return c.astype(np.int64) if c is not None else np.full(n, UNDEF, np.int64)
+
+    if isinstance(expr, Comparison):
+        lv, rv = col(expr.lhs), col(expr.rhs)
+        bound = (lv != UNDEF) & (rv != UNDEF)
+        ops = {"=": np.equal, "!=": np.not_equal, "<": np.less,
+               "<=": np.less_equal, ">": np.greater, ">=": np.greater_equal}
+        return bound & ops[expr.op](lv, rv)
+    if isinstance(expr, And):
+        out = np.ones(n, bool)
+        for p in expr.parts:
+            out &= filter_mask(p, rel)
+        return out
+    if isinstance(expr, Or):
+        out = np.zeros(n, bool)
+        for p in expr.parts:
+            out |= filter_mask(p, rel)
+        return out
+    assert isinstance(expr, Not)
+    return ~filter_mask(expr.part, rel)
 
 
 @dataclass
@@ -111,11 +187,10 @@ class LocalEngine:
         return self._join(bindings, matches)
 
     # -- generic hash join ----------------------------------------------------
-    def _join(self, left: Relation, right: Relation) -> Relation:
-        if not left:
-            return right
-        if not right:
-            return left
+    def _join_indices(self, left: Relation,
+                      right: Relation) -> "tuple[np.ndarray, np.ndarray]":
+        """Row-index pairs ``(li, ri)`` of the inner join on the shared
+        variables (cartesian when disjoint)."""
         shared = sorted(set(left) & set(right))
         nl, nr = _nrows(left), _nrows(right)
         if not shared:  # cartesian
@@ -145,12 +220,40 @@ class LocalEngine:
                 for v in shared:
                     ok &= left[v][li] == right[v][ri]
                 li, ri = li[ok], ri[ok]
+        return li, ri
+
+    def _join(self, left: Relation, right: Relation) -> Relation:
+        if not left:
+            return right
+        if not right:
+            return left
+        li, ri = self._join_indices(left, right)
         out: Relation = {}
         for v in left:
             out[v] = left[v][li]
         for v in right:
             if v not in out:
                 out[v] = right[v][ri]
+        return out
+
+    def _left_join(self, left: Relation, right: Relation) -> Relation:
+        """OPTIONAL: the inner join plus every unmatched left row, right-only
+        columns padded with UNDEF."""
+        if not left:
+            return right
+        if not right:
+            return left
+        li, ri = self._join_indices(left, right)
+        matched = np.zeros(_nrows(left), bool)
+        matched[li] = True
+        un = np.nonzero(~matched)[0]
+        out: Relation = {}
+        for v in left:
+            out[v] = np.concatenate([left[v][li], left[v][un]])
+        for v in right:
+            if v not in out:
+                out[v] = np.concatenate(
+                    [right[v][ri], np.full(len(un), UNDEF, right[v].dtype)])
         return out
 
     def _eval_subquery(self, node: SubqueryNode, metrics: ExecutionMetrics,
@@ -183,6 +286,22 @@ class LocalEngine:
     def _execute(self, node: PlanNode, metrics: ExecutionMetrics) -> Relation:
         if isinstance(node, SubqueryNode):
             return self._eval_subquery(node, metrics)
+        if isinstance(node, LeftJoinPlanNode):
+            left = self._execute(node.left, metrics)
+            metrics.intermediate_rows += _nrows(left)
+            right = self._execute(node.right, metrics)
+            metrics.intermediate_rows += _nrows(right)
+            return self._left_join(left, right)
+        if isinstance(node, UnionPlanNode):
+            parts = [self._execute(c, metrics) for c in node.children]
+            for p in parts:
+                metrics.intermediate_rows += _nrows(p)
+            return _outer_union(parts)
+        if isinstance(node, FilterPlanNode):
+            rel = self._execute(node.child, metrics)
+            metrics.intermediate_rows += _nrows(rel)
+            m = filter_mask(node.expr, rel)
+            return {v: c[m] for v, c in rel.items()}
         assert isinstance(node, JoinPlanNode)
         left = self._execute(node.left, metrics)
         metrics.intermediate_rows += _nrows(left)
@@ -198,9 +317,12 @@ class LocalEngine:
         metrics = ExecutionMetrics()
         t0 = time.perf_counter()
         rel = self._execute(plan.root, metrics)
-        # query completion (§3.4 step iv): projection + DISTINCT
+        # query completion (§3.4 step iv): projection + DISTINCT.  Algebra
+        # queries fill never-bound projection variables with UNDEF (the
+        # oracle does the same); the legacy flat-BGP path keeps its 0-fill.
+        fill = 0 if plan.query.root is None else UNDEF
         proj = plan.query.effective_projection()
-        rel = {v: rel.get(v, np.zeros(_nrows(rel), np.int32)) for v in proj}
+        rel = {v: rel.get(v, np.full(_nrows(rel), fill, np.int32)) for v in proj}
         if plan.query.distinct:
             rel = _dedup(rel)
         metrics.wall_ms = (time.perf_counter() - t0) * 1e3
@@ -208,8 +330,34 @@ class LocalEngine:
 
 
 # --------------------------------------------------------------------------
-# Gold-standard evaluator: BGP over the union of all sources
+# Gold-standard evaluator: the full group algebra over the union of sources
 # --------------------------------------------------------------------------
+
+def _naive_group(eng: LocalEngine, src: Source, node: GroupNode) -> Relation:
+    """Recursive oracle evaluation of a (raw, un-normalized) group tree over
+    one source.  Deliberately structured nothing like the planner: joins
+    follow the syntactic order, so differential tests exercise normalization
+    and join reordering, not just the operators."""
+    if isinstance(node, Bgp):
+        rel: Relation = {}
+        for tp in node.patterns:
+            rel = eng._eval_pattern(src, tp, rel if rel else None)
+        return rel
+    if isinstance(node, Join):
+        rel = {}
+        for c in node.children:
+            rel = eng._join(rel, _naive_group(eng, src, c))
+        return rel
+    if isinstance(node, LeftJoin):
+        return eng._left_join(_naive_group(eng, src, node.left),
+                              _naive_group(eng, src, node.right))
+    if isinstance(node, Union):
+        return _outer_union([_naive_group(eng, src, m) for m in node.members])
+    assert isinstance(node, Filter)
+    rel = _naive_group(eng, src, node.child)
+    m = filter_mask(node.expr, rel)
+    return {v: c[m] for v, c in rel.items()}
+
 
 def naive_evaluate(fed: Federation, query: BGPQuery) -> set[tuple[int, ...]]:
     from repro.rdf.dataset import TripleTable
@@ -220,13 +368,18 @@ def naive_evaluate(fed: Federation, query: BGPQuery) -> set[tuple[int, ...]]:
     table = TripleTable.from_triples(s, p, o)
     union = Source("union", table)
     eng = LocalEngine(Federation([union], fed.dictionary))
-    rel: Relation = {}
-    for tp in query.patterns:
-        nxt = eng._eval_pattern(union, tp, rel if rel else None)
-        rel = nxt
-        if _nrows(rel) == 0 and rel:
-            break
+    if query.root is None:
+        rel: Relation = {}
+        for tp in query.patterns:
+            nxt = eng._eval_pattern(union, tp, rel if rel else None)
+            rel = nxt
+            if _nrows(rel) == 0 and rel:
+                break
+        fill = 0
+    else:
+        rel = _naive_group(eng, union, query.algebra())
+        fill = UNDEF
     proj = query.effective_projection()
     n = _nrows(rel)
-    cols = [rel.get(v, np.zeros(n, np.int32)) for v in proj]
+    cols = [rel.get(v, np.full(n, fill, np.int32)) for v in proj]
     return set(zip(*[c.tolist() for c in cols])) if n else set()

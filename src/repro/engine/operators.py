@@ -122,3 +122,98 @@ def distinct(rel: jax.Array, valid: jax.Array, cap: int):
 @jax.jit
 def count_valid(valid: jax.Array) -> jax.Array:
     return jnp.sum(valid.astype(jnp.int32))
+
+
+# --------------------------------------------------------------------------
+# Group-algebra operators (OPTIONAL / UNION / FILTER, docs/algebra.md)
+# --------------------------------------------------------------------------
+
+# unbound marker inside int32 columns (mirrors repro.engine.local.UNDEF)
+UNDEF = -1
+
+OP_CODES = {"=": 0, "!=": 1, "<": 2, "<=": 3, ">": 4, ">=": 5}
+
+
+@partial(jax.jit, static_argnames=("cap",))
+def left_merge_join(left: jax.Array, lvalid: jax.Array, lkey: int,
+                    right: jax.Array, rvalid: jax.Array, rkey: int,
+                    cap: int):
+    """OPTIONAL on one key column with bounded output: ``merge_join`` plus
+    one pad row per unmatched valid left row, right columns set to UNDEF.
+    Output columns: left cols ++ right cols, like ``merge_join``."""
+    L = left.shape[0]
+    BIG = jnp.int32(2**31 - 1)
+    rk = jnp.where(rvalid, right[:, rkey], BIG)
+    order = jnp.argsort(rk, stable=True)
+    right_s = right[order]
+    rk_s = rk[order]
+
+    lk = jnp.where(lvalid, left[:, lkey], BIG - 1)
+    start = jnp.searchsorted(rk_s, lk, side="left")
+    end = jnp.searchsorted(rk_s, lk, side="right")
+    counts = jnp.where(lvalid, end - start, 0)
+    # every valid left row emits max(matches, 1) rows
+    outcnt = jnp.where(lvalid, jnp.maximum(counts, 1), 0)
+    offsets = jnp.cumsum(outcnt)
+    total = offsets[-1]
+
+    t = jnp.arange(cap)
+    li = jnp.searchsorted(offsets, t, side="right")
+    li_c = jnp.clip(li, 0, L - 1)
+    prev = jnp.where(li_c > 0, offsets[li_c - 1], 0)
+    rank = t - prev
+    matched = counts[li_c] > 0
+    ri = jnp.clip(start[li_c] + rank, 0, right.shape[0] - 1)
+    valid = (t < total) & lvalid[li_c]
+    rdata = jnp.where(matched[:, None], right_s[ri], jnp.int32(UNDEF))
+    data = jnp.concatenate([left[li_c], rdata], axis=1)
+    data = jnp.where(valid[:, None], data, 0)
+    return data, valid, total > cap
+
+
+@partial(jax.jit, static_argnames=("col_map",))
+def align_columns(rel: jax.Array, valid: jax.Array, col_map: tuple[int, ...]):
+    """Schema alignment before ``union_rels``: output column j is input
+    column ``col_map[j]``, or UNDEF where ``col_map[j] < 0`` (the variable is
+    absent from this branch)."""
+    cols = [rel[:, c] if c >= 0
+            else jnp.full(rel.shape[0], jnp.int32(UNDEF))
+            for c in col_map]
+    data = jnp.stack(cols, axis=1)
+    return jnp.where(valid[:, None], data, 0), valid
+
+
+@partial(jax.jit, static_argnames=("cap",))
+def union_rels(a: jax.Array, avalid: jax.Array, b: jax.Array, bvalid: jax.Array,
+               cap: int):
+    """Union of two schema-aligned bounded relations (align branches with
+    ``align_columns`` first), a-rows before b-rows, stable."""
+    data = jnp.concatenate([a, b], axis=0)
+    valid = jnp.concatenate([avalid, bvalid])
+    idx, v, ovf = compact(valid, cap)
+    return jnp.where(v[:, None], data[idx], 0), v, ovf
+
+
+@partial(jax.jit, static_argnames=("op", "lhs_col", "rhs_col"))
+def compare_mask(rel: jax.Array, valid: jax.Array, op: int,
+                 lhs_col: int, rhs_col: int,
+                 lhs_const: jax.Array, rhs_const: jax.Array) -> jax.Array:
+    """Row mask of one FILTER comparison (``OP_CODES``); a side is a column
+    when its ``*_col >= 0``, else the ``*_const`` scalar.  Two-valued: rows
+    with an UNDEF side are false.  Combine masks with jnp logical ops for
+    &&/||/! and compact with ``filter_rows``."""
+    n = rel.shape[0]
+    lv = rel[:, lhs_col] if lhs_col >= 0 else jnp.full(n, lhs_const, jnp.int32)
+    rv = rel[:, rhs_col] if rhs_col >= 0 else jnp.full(n, rhs_const, jnp.int32)
+    bound = (lv != UNDEF) & (rv != UNDEF)
+    # op is static, so only the requested comparison is traced
+    res = [lambda: lv == rv, lambda: lv != rv, lambda: lv < rv,
+           lambda: lv <= rv, lambda: lv > rv, lambda: lv >= rv][op]()
+    return valid & bound & res
+
+
+@partial(jax.jit, static_argnames=("cap",))
+def filter_rows(rel: jax.Array, valid: jax.Array, mask: jax.Array, cap: int):
+    """Compact the rows where ``mask`` holds (FILTER application)."""
+    idx, v, ovf = compact(valid & mask, cap)
+    return jnp.where(v[:, None], rel[idx], 0), v, ovf

@@ -205,6 +205,32 @@ def generate_federation(spec: FederationSpec) -> tuple[Federation, GroundTruth]:
 # Query workload generation (LD/CD/LS-style)
 # --------------------------------------------------------------------------
 
+def _star_patterns(rng: np.random.Generator, fed: Federation, gt: GroundTruth,
+                   src: str, tmpl: int, var: str, k: int,
+                   bind_obj: bool) -> "list[TriplePattern] | None":
+    """A k-pattern star over one template's predicates (subject ``?var``),
+    optionally grounding one object so the star has a bound constant.
+    Non-empty by construction: every template entity matches."""
+    preds = gt.template_preds[src][tmpl]
+    ents = gt.template_entities[src][tmpl]
+    if len(ents) == 0 or len(preds) < k:
+        return None
+    chosen = rng.choice(preds, size=k, replace=False)
+    table = fed.by_name(src).table
+    pats = []
+    for j, pred in enumerate(chosen.tolist()):
+        if bind_obj and j == 0:
+            e = int(rng.choice(ents))
+            rows = table.scan(e, int(pred), None)
+            if len(rows) == 0:
+                return None
+            obj = int(table.o[rows[0]])
+            pats.append(TriplePattern(Var(var), Const(int(pred)), Const(obj)))
+        else:
+            pats.append(TriplePattern(Var(var), Const(int(pred)), Var(f"{var}_v{j}")))
+    return pats
+
+
 def generate_workload(
     fed: Federation,
     gt: GroundTruth,
@@ -218,24 +244,7 @@ def generate_workload(
     queries: list[BGPQuery] = []
 
     def star_patterns(src: str, tmpl: int, var: str, k: int, bind_obj: bool) -> list[TriplePattern] | None:
-        preds = gt.template_preds[src][tmpl]
-        ents = gt.template_entities[src][tmpl]
-        if len(ents) == 0 or len(preds) < k:
-            return None
-        chosen = rng.choice(preds, size=k, replace=False)
-        table = fed.by_name(src).table
-        pats = []
-        for j, pred in enumerate(chosen.tolist()):
-            if bind_obj and j == 0:
-                e = int(rng.choice(ents))
-                rows = table.scan(e, int(pred), None)
-                if len(rows) == 0:
-                    return None
-                obj = int(table.o[rows[0]])
-                pats.append(TriplePattern(Var(var), Const(int(pred)), Const(obj)))
-            else:
-                pats.append(TriplePattern(Var(var), Const(int(pred)), Var(f"{var}_v{j}")))
-        return pats
+        return _star_patterns(rng, fed, gt, src, tmpl, var, k, bind_obj)
 
     src_names = [s.name for s in fed.sources]
 
@@ -290,6 +299,131 @@ def generate_workload(
             TriplePattern(Var("y"), Const(q), Var("z")),
         ]
         queries.append(BGPQuery(pats, distinct=True, projection=["x", "z"], name=f"PA{made + 1}"))
+        made += 1
+
+    return queries
+
+
+# --------------------------------------------------------------------------
+# Extended (group-algebra) workload: OPTIONAL / UNION / FILTER families
+# --------------------------------------------------------------------------
+
+def generate_extended_workload(
+    fed: Federation,
+    gt: GroundTruth,
+    n_optional: int = 6,
+    n_union: int = 6,
+    n_filtered: int = 4,
+    seed: int = 17,
+) -> list[BGPQuery]:
+    """Seeded group-tree queries over the synthetic federation, three families:
+
+    * **OS** (optional-star): a template star plus 1–2 OPTIONAL arms whose
+      predicates come from *other* templates of the same source, so some
+      answers carry UNDEF — the arms are genuinely partial.
+    * **UN** (union-of-templates): one star shape instantiated over two
+      different (source, template) pairs, branches sharing variable names.
+    * **FC** (filtered-chain): a cross-source chain or a star with a
+      ``!=`` FILTER over distinct object variables (always satisfiable —
+      distinct literal pools — so answers stay non-empty).
+
+    Every query carries a non-degenerate group tree (``query.root`` is set);
+    the conjunctive parts reuse the template machinery of
+    ``generate_workload`` so answers are non-empty by construction."""
+    from repro.query.algebra import (
+        Bgp,
+        Comparison,
+        Filter,
+        LeftJoin,
+        Union,
+        from_algebra,
+    )
+
+    rng = np.random.default_rng(seed)
+    queries: list[BGPQuery] = []
+    src_names = [s.name for s in fed.sources]
+
+    # -- OS: star + 1-2 OPTIONAL arms ---------------------------------------
+    made = 0
+    attempts = 0
+    while made < n_optional and attempts < 400:
+        attempts += 1
+        src = str(rng.choice(src_names))
+        tmpl = int(rng.integers(len(gt.template_preds[src])))
+        base = _star_patterns(rng, fed, gt, src, tmpl, "x",
+                              int(rng.integers(2, 4)), bind_obj=False)
+        if base is None:
+            continue
+        here = set(gt.template_preds[src][tmpl])
+        elsewhere = sorted({p for t in gt.template_preds[src] for p in t} - here)
+        if not elsewhere:
+            continue
+        n_arms = int(rng.integers(1, 3))
+        arm_preds = rng.choice(elsewhere, size=min(n_arms, len(elsewhere)),
+                               replace=False)
+        node = Bgp(tuple(base))
+        opt_vars = []
+        for a, pred in enumerate(arm_preds.tolist()):
+            ov = f"o{a}"
+            node = LeftJoin(node, Bgp((TriplePattern(Var("x"), Const(int(pred)),
+                                                     Var(ov)),)))
+            opt_vars.append(ov)
+        queries.append(from_algebra(node, distinct=bool(rng.random() < 0.5),
+                                    projection=["x", *opt_vars],
+                                    name=f"OS{made + 1}"))
+        made += 1
+
+    # -- UN: the same star shape over two templates -------------------------
+    made = 0
+    attempts = 0
+    while made < n_union and attempts < 400:
+        attempts += 1
+        src_a = str(rng.choice(src_names))
+        src_b = str(rng.choice(src_names))
+        t_a = int(rng.integers(len(gt.template_preds[src_a])))
+        t_b = int(rng.integers(len(gt.template_preds[src_b])))
+        if (src_a, t_a) == (src_b, t_b):
+            continue
+        k = int(rng.integers(2, 4))
+        b_a = _star_patterns(rng, fed, gt, src_a, t_a, "x", k, bind_obj=False)
+        b_b = _star_patterns(rng, fed, gt, src_b, t_b, "x", k, bind_obj=False)
+        if b_a is None or b_b is None:
+            continue
+        node = Union((Bgp(tuple(b_a)), Bgp(tuple(b_b))))
+        queries.append(from_algebra(node, distinct=bool(rng.random() < 0.5),
+                                    projection=["x"], name=f"UN{made + 1}"))
+        made += 1
+
+    # -- FC: chain/star with a != filter over distinct object variables -----
+    links = gt.cross_links
+    made = 0
+    attempts = 0
+    while made < n_filtered and attempts < 400:
+        attempts += 1
+        if links and rng.random() < 0.5:
+            (src, dst, s_e, pred, o_e) = links[int(rng.integers(len(links)))]
+            t2 = gt.entity_template[dst][o_e]
+            preds2 = gt.template_preds[dst][t2]
+            if not preds2:
+                continue
+            q = int(rng.choice(preds2))
+            pats = [TriplePattern(Var("x"), Const(int(pred)), Var("y")),
+                    TriplePattern(Var("y"), Const(q), Var("z"))]
+            expr = Comparison("!=", Var("x"), Var("z"))
+            proj = ["x", "z"]
+        else:
+            src = str(rng.choice(src_names))
+            tmpl = int(rng.integers(len(gt.template_preds[src])))
+            pats = _star_patterns(rng, fed, gt, src, tmpl, "x", 3,
+                                  bind_obj=False)
+            if pats is None:
+                continue
+            # distinct per-predicate literal pools: != always satisfiable
+            expr = Comparison("!=", Var("x_v1"), Var("x_v2"))
+            proj = ["x"]
+        node = Filter(expr, Bgp(tuple(pats)))
+        queries.append(from_algebra(node, distinct=bool(rng.random() < 0.5),
+                                    projection=proj, name=f"FC{made + 1}"))
         made += 1
 
     return queries

@@ -152,6 +152,59 @@ def test_rpr002_clean_and_suppressed_twins(tmp_path):
     assert len(res.suppressed) == 1
 
 
+def test_rpr002_detach_completeness_fires_on_missing_variant(tmp_path):
+    res = run_on(tmp_path, "planner.py", """
+        class PlanNode:
+            pass
+
+        class SubqueryNode(PlanNode):
+            pass
+
+        class LeftJoinPlanNode(PlanNode):
+            pass
+
+        def _copy_node(node):                     # LeftJoinPlanNode missing
+            if isinstance(node, SubqueryNode):
+                return SubqueryNode()
+            raise AssertionError(node)
+
+        def _rename_node(node, ren):              # handles both variants
+            if isinstance(node, SubqueryNode):
+                return SubqueryNode()
+            if isinstance(node, LeftJoinPlanNode):
+                return LeftJoinPlanNode()
+            raise AssertionError(node)
+    """, rules=["RPR002"])
+    findings = [f for f in res.findings if f.rule == "RPR002"]
+    assert len(findings) == 1
+    assert "_copy_node" in findings[0].message
+    assert "LeftJoinPlanNode" in findings[0].message
+
+
+def test_rpr002_detach_completeness_clean_when_all_variants_handled(tmp_path):
+    res = run_on(tmp_path, "planner.py", """
+        class PlanNode:
+            pass
+
+        class SubqueryNode(PlanNode):
+            pass
+
+        class UnionPlanNode(PlanNode):
+            pass
+
+        def _copy_node(node):
+            if isinstance(node, SubqueryNode):
+                return SubqueryNode()
+            if isinstance(node, UnionPlanNode):
+                return UnionPlanNode()
+            raise AssertionError(node)
+
+        def helper_without_detach_name(node):     # not a detach helper: free
+            return node
+    """, rules=["RPR002"])
+    assert rule_lines(res, "RPR002") == []
+
+
 # --------------------------------------------------------------------------
 # RPR003 bench-parity (the PR 5 kernel_bench bug, verbatim shape)
 # --------------------------------------------------------------------------

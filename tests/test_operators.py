@@ -78,3 +78,77 @@ def test_semi_bind():
                                  jnp.asarray(keys), jnp.asarray(kvalid), 0, 4)
     got = np.asarray(data)[np.asarray(v)]
     np.testing.assert_array_equal(got, [[2, 20]])
+
+
+# --------------------------------------------------------------------------
+# Group-algebra operators (OPTIONAL / UNION / FILTER twins)
+# --------------------------------------------------------------------------
+
+def test_left_merge_join_matches_numpy():
+    rng = np.random.default_rng(9)
+    left = rng.integers(0, 16, (32, 2)).astype(np.int32)   # keys 8..15 miss
+    right = rng.integers(0, 8, (32, 2)).astype(np.int32)
+    lvalid = np.arange(32) < 20
+    rvalid = np.arange(32) < 24
+    data, valid, ovf = ops.left_merge_join(
+        jnp.asarray(left), jnp.asarray(lvalid), 0,
+        jnp.asarray(right), jnp.asarray(rvalid), 1, 256)
+    got = sorted(tuple(r) for r in np.asarray(data)[np.asarray(valid)].tolist())
+    want = []
+    for i in range(20):
+        matches = [j for j in range(24) if right[j, 1] == left[i, 0]]
+        if matches:
+            for j in matches:
+                want.append(tuple(left[i].tolist() + right[j].tolist()))
+        else:                                   # unmatched: UNDEF-padded row
+            want.append(tuple(left[i].tolist() + [ops.UNDEF, ops.UNDEF]))
+    assert not bool(ovf)
+    assert got == sorted(want)
+    assert any(ops.UNDEF in r for r in got)     # the pad path is exercised
+
+
+def test_left_merge_join_overflow_flag():
+    left = np.zeros((16, 1), np.int32)
+    right = np.zeros((16, 1), np.int32)
+    valid = np.ones(16, bool)
+    _, v, ovf = ops.left_merge_join(jnp.asarray(left), jnp.asarray(valid), 0,
+                                    jnp.asarray(right), jnp.asarray(valid), 0, 64)
+    assert bool(ovf) and int(np.asarray(v).sum()) == 64  # 256 rows, cap 64
+
+
+def test_align_columns_and_union_rels():
+    a = np.array([[1, 2], [3, 4], [0, 0]], np.int32)
+    av = np.array([True, True, False])
+    b = np.array([[5], [6], [7]], np.int32)
+    bv = np.array([True, False, True])
+    # shared schema (x, y, z): a has (x, y), b has (y,) only
+    aa, av2 = ops.align_columns(jnp.asarray(a), jnp.asarray(av), (0, 1, -1))
+    bb, bv2 = ops.align_columns(jnp.asarray(b), jnp.asarray(bv), (-1, 0, -1))
+    data, v, ovf = ops.union_rels(aa, av2, bb, bv2, 8)
+    got = {tuple(r) for r in np.asarray(data)[np.asarray(v)].tolist()}
+    U = ops.UNDEF
+    assert not bool(ovf)
+    assert got == {(1, 2, U), (3, 4, U), (U, 5, U), (U, 7, U)}
+
+
+def test_compare_mask_two_valued_and_filter_rows():
+    U = ops.UNDEF
+    rel = np.array([[3, 3], [3, 5], [5, 3], [U, 3], [3, U]], np.int32)
+    valid = np.ones(5, bool)
+    zero = jnp.int32(0)
+    jrel, jv = jnp.asarray(rel), jnp.asarray(valid)
+    for op_s, fn in [("=", np.equal), ("!=", np.not_equal), ("<", np.less),
+                     ("<=", np.less_equal), (">", np.greater),
+                     (">=", np.greater_equal)]:
+        m = ops.compare_mask(jrel, jv, ops.OP_CODES[op_s], 0, 1, zero, zero)
+        want = fn(rel[:, 0], rel[:, 1]) & (rel[:, 0] != U) & (rel[:, 1] != U)
+        np.testing.assert_array_equal(np.asarray(m), want)
+    # UNDEF rows are false even for != (two-valued semantics)
+    m = ops.compare_mask(jrel, jv, ops.OP_CODES["!="], 0, 1, zero, zero)
+    assert not bool(np.asarray(m)[3]) and not bool(np.asarray(m)[4])
+    # constant side + compaction
+    m = ops.compare_mask(jrel, jv, ops.OP_CODES[">="], 0, -1, zero, jnp.int32(4))
+    data, v, ovf = ops.filter_rows(jrel, jv, m, 5)
+    got = np.asarray(data)[np.asarray(v)]
+    np.testing.assert_array_equal(got, [[5, 3]])
+    assert not bool(ovf)

@@ -274,3 +274,26 @@ def test_bitmask_dp_equals_reference_on_random_star_graphs(case):
     assert new.leaf_order() == ref.leaf_order()
     np.testing.assert_allclose(new.cost, ref.cost, rtol=1e-9, atol=1e-12)
     np.testing.assert_allclose(new.cardinality, ref.cardinality, rtol=1e-9, atol=1e-12)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=12, deadline=None)
+def test_random_group_trees_match_oracle(tiny_fed, tiny_stats, seed):
+    """Property: on random OPTIONAL/UNION/FILTER group trees (<= 3 combinator
+    levels) the normalized, DP-reordered plan executes bit-identical to the
+    raw-tree ``naive_evaluate`` oracle.  Seeded twin (always on):
+    tests/test_algebra.py::test_random_group_trees_match_oracle."""
+    from test_algebra import _engine_rows, _random_tree, _star_leaves
+
+    from repro.core.planner import OdysseyOptimizer
+    from repro.engine.local import naive_evaluate
+    from repro.query.algebra import certain_variables, from_algebra
+
+    fed, gt = tiny_fed
+    rng = np.random.default_rng(seed)
+    leaves = _star_leaves(fed, gt, rng)
+    root = _random_tree(rng, leaves, depth=int(rng.integers(1, 4)))
+    q = from_algebra(root, distinct=bool(rng.random() < 0.5),
+                     projection=sorted(certain_variables(root)))
+    plan = OdysseyOptimizer(tiny_stats).optimize(q)
+    assert _engine_rows(fed, plan, q) == naive_evaluate(fed, q)
