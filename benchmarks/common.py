@@ -90,7 +90,8 @@ def run_all(scale: float = 1.0, engines: list[str] | None = None,
                 t0 = time.perf_counter()
                 plan = opt.optimize(q)
                 ots.append((time.perf_counter() - t0) * 1e3)
-                rel, m = eng.execute(plan)
+                res = eng.execute(plan)
+                rel, m = res.rows, res.metrics
                 ets.append(m.wall_ms)
             proj = q.effective_projection()
             n = len(next(iter(rel.values()))) if rel else 0

@@ -135,7 +135,8 @@ def extended_workload(scale: float = 1.0):
         t0 = time.perf_counter()
         plan = opt.optimize(q)
         ot_ms = (time.perf_counter() - t0) * 1e3
-        rel, m = eng.execute(plan)
+        res = eng.execute(plan)
+        rel, m = res.rows, res.metrics
         proj = q.effective_projection()
         n = len(next(iter(rel.values()))) if rel else 0
         got = set(zip(*[rel[v].tolist() for v in proj])) if n else set()

@@ -36,6 +36,7 @@ HIGHER_IS_BETTER = {
     "stats_refresh_speedup_x": True,
     "dp_sweep_jax_vs_numpy_x": True,
     "extended_completeness": True,
+    "serve_throughput_x": True,
     "peak_rss_mb": False,
 }
 
@@ -48,7 +49,13 @@ def main() -> None:
     scale = args.scale if args.scale is not None else (0.25 if args.quick else 1.0)
 
     from benchmarks import fedbench_figs as F
-    from benchmarks import kernel_bench, planner_bench, roofline_bench, stats_refresh_bench
+    from benchmarks import (
+        kernel_bench,
+        planner_bench,
+        roofline_bench,
+        serve_bench,
+        stats_refresh_bench,
+    )
     from benchmarks.common import run_all
 
     csv_rows: list[tuple] = []
@@ -85,6 +92,10 @@ def main() -> None:
     # informational until the next baseline refresh: the on-device (Pallas)
     # DP layer sweep vs the numpy sweep, bit-identical plans asserted
     add(planner_bench.run_dp_backends())
+    # serving loop: open-loop arrivals, affinity+pipeline vs arrival-order
+    # drain — guarded sustained-throughput multiple (hard floor 1.0: the
+    # scheduler must beat the legacy drain loop) + per-request answer parity
+    add(serve_bench.run(scale, quick=args.quick))
     # --quick also asserts incremental failover >= 3x full rebuild
     add(stats_refresh_bench.run(scale, assert_speedup=args.quick))
     add(kernel_bench.run())

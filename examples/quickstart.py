@@ -60,7 +60,8 @@ def main():
     for name, opt in (("Odyssey", OdysseyOptimizer(stats)),
                       ("FedX", FedXOptimizer(fed))):
         plan = opt.optimize(q)
-        rel, m = engine.execute(plan)
+        res = engine.execute(plan)
+        rel, m = res.rows, res.metrics
         n = len(next(iter(rel.values()))) if rel else 0
         print(f"\n-- {name} --")
         show_plan(plan.root, fed)

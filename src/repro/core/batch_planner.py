@@ -46,6 +46,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
+from typing import Iterator
 
 from repro.core.decomposition import StarGraph, decompose
 from repro.core.join_order import (DP_SWEEP_COUNTERS, dp_join_order_batch,
@@ -107,6 +108,61 @@ def pricing_key(graph: StarGraph, distinct: bool) -> tuple:
                 isinstance(tp.o, Const)) for tp in s.patterns))
         for s in graph.stars)
     return (star_graph_topology(graph), stars, bool(distinct))
+
+
+# -- plan-sharing affinity, without planning ---------------------------------
+
+AFFINITY_TIERS = ("signature", "selection", "pricing", "shape")
+
+
+@dataclass(frozen=True)
+class AffinityKey:
+    """The four plan-sharing tiers of one query, deepest first — exactly the
+    tiering ``plan_batch`` exploits, computed host-side from the query text
+    alone (no statistics, no source selection, no DP).  Two queries that are
+    equal at a tier share correspondingly more of the batched pipeline:
+
+    - ``signature``: exact ``query_signature`` — duplicates/cache hits; the
+      whole plan is shared (rebound per query).
+    - ``selection``: one source-selection fixpoint for the group.
+    - ``pricing``: bit-identical statistics, DP state and join tree; priced
+      once, re-emitted per member.
+    - ``shape``: one stacked DP sweep, per-member costing.
+
+    ``selection``/``pricing``/``shape`` are ``None`` for non-conjunctive
+    (group-tree) queries, which only share at the signature tier.
+    """
+
+    signature: tuple
+    selection: "tuple | None"
+    pricing: "tuple | None"
+    shape: "tuple | None"
+
+    def tier_keys(self) -> "Iterator[tuple[str, tuple]]":
+        """(tier name, key) pairs, deepest tier first, skipping tiers this
+        query does not participate in."""
+        for name, key in zip(AFFINITY_TIERS, (self.signature, self.selection,
+                                              self.pricing, self.shape)):
+            if key is not None:
+                yield name, key
+
+
+def plan_affinity(query: BGPQuery) -> AffinityKey:
+    """Affinity key of one query for admission-time batch formation (the
+    serving scheduler groups queued requests whose keys match at the deepest
+    possible tier).  Pure host-side structure: safe to call on every
+    ``submit`` without touching statistics or the planner."""
+    from repro.core.planner import query_signature
+
+    sig, _ = query_signature(query)
+    if not query.is_conjunctive():
+        return AffinityKey(signature=sig, selection=None, pricing=None,
+                           shape=None)
+    graph = decompose(query)
+    return AffinityKey(signature=sig,
+                       selection=selection_key(graph),
+                       pricing=pricing_key(graph, query.distinct),
+                       shape=shape_key(graph, query.distinct))
 
 
 def plan_batch(optimizer, queries: "list[BGPQuery]"):

@@ -44,6 +44,7 @@ except (ImportError, TypeError):  # pragma: no cover
 
 from repro.core.planner import JoinPlanNode, PhysicalPlan, PlanNode, SubqueryNode
 from repro.engine import operators as ops
+from repro.engine.local import ExecutionResult
 from repro.query.algebra import Const, TriplePattern, Var
 from repro.rdf.dataset import Federation
 
@@ -341,7 +342,7 @@ class DistributedEngine:
                          for v in join_vars[1:]]  # type: ignore[attr-defined]
         return out
 
-    def execute(self, plan: PhysicalPlan) -> tuple[dict[str, np.ndarray], DistMetrics]:
+    def execute(self, plan: PhysicalPlan) -> ExecutionResult:
         metrics = DistMetrics()
         rel = self._eval_node(plan.root, metrics)
         data, valid = self._collect_fn(len(rel.columns))(rel.data, rel.valid)
@@ -358,7 +359,8 @@ class DistributedEngine:
             stacked = np.stack([out[v] for v in proj], axis=1)
             _, idx = np.unique(stacked, axis=0, return_index=True)
             out = {v: out[v][np.sort(idx)] for v in proj}
-        return out, metrics
+        return ExecutionResult(rows=out, metrics=metrics, plan=plan,
+                               stats_epoch=plan.stats_epoch)
 
 
 def _star_subject(tp: TriplePattern):

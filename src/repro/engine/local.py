@@ -8,6 +8,7 @@ executor behind the FedBench-style benchmarks (ET / NTT figures).
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -136,6 +137,33 @@ class ExecutionMetrics:
     intermediate_rows: int = 0
     wall_ms: float = 0.0
     overflowed: bool = False
+
+
+@dataclass(frozen=True)
+class ExecutionResult:
+    """What executing one ``PhysicalPlan`` produced: the result relation,
+    the engine's runtime metrics (``ExecutionMetrics`` here,
+    ``DistMetrics`` from the distributed engine), the plan it ran, and the
+    statistics epoch that plan was emitted under — so serving/failover
+    layers can attribute an answer without threading side channels.
+
+    Deprecation shim: iterating unpacks as the legacy ``(rows, metrics)``
+    tuple, so out-of-tree ``rows, m = engine.execute(plan)`` callers keep
+    working (with a ``DeprecationWarning``) instead of breaking.  Prefer
+    the named fields.
+    """
+
+    rows: Relation
+    metrics: object
+    plan: "PhysicalPlan | None" = None
+    stats_epoch: int = 0
+
+    def __iter__(self):
+        warnings.warn(
+            "unpacking ExecutionResult as a (rows, metrics) tuple is "
+            "deprecated; use result.rows / result.metrics",
+            DeprecationWarning, stacklevel=2)
+        return iter((self.rows, self.metrics))
 
 
 class LocalEngine:
@@ -313,7 +341,7 @@ class LocalEngine:
         metrics.intermediate_rows += _nrows(right)
         return self._join(left, right)
 
-    def execute(self, plan: PhysicalPlan) -> tuple[Relation, ExecutionMetrics]:
+    def execute(self, plan: PhysicalPlan) -> ExecutionResult:
         metrics = ExecutionMetrics()
         t0 = time.perf_counter()
         rel = self._execute(plan.root, metrics)
@@ -326,7 +354,8 @@ class LocalEngine:
         if plan.query.distinct:
             rel = _dedup(rel)
         metrics.wall_ms = (time.perf_counter() - t0) * 1e3
-        return rel, metrics
+        return ExecutionResult(rows=rel, metrics=metrics, plan=plan,
+                               stats_epoch=plan.stats_epoch)
 
 
 # --------------------------------------------------------------------------

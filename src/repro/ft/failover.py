@@ -100,8 +100,8 @@ class FailoverSession:
             plan = self.optimizer.optimize(query)
             engine = FailoverEngine(self.fed)
             try:
-                rows, metrics = self.retry.run(engine.execute, plan)
-                return FailoverResult(rows=rows, metrics=metrics,
+                res = self.retry.run(engine.execute, plan)
+                return FailoverResult(rows=res.rows, metrics=res.metrics,
                                       partial=bool(self.excluded),
                                       excluded=list(self.excluded),
                                       replans=replans, cache_hit=plan.cached,
@@ -142,9 +142,10 @@ class FailoverSession:
                     still.append(i)       # replan under the new epoch
                     continue
                 try:
-                    rows, metrics = self.retry.run(engine.execute, plan)
+                    res = self.retry.run(engine.execute, plan)
                     results[i] = FailoverResult(
-                        rows=rows, metrics=metrics, partial=bool(self.excluded),
+                        rows=res.rows, metrics=res.metrics,
+                        partial=bool(self.excluded),
                         excluded=list(self.excluded), replans=replans,
                         cache_hit=plan.cached, stats_epoch=plan.stats_epoch)
                 except RuntimeError:

@@ -53,14 +53,16 @@ def main() -> int:
         plan = opt.optimize(q)
         if plan.fallback:
             continue
-        rel_l, m_l = local.execute(plan)
+        res_l = local.execute(plan)
+        rel_l, m_l = res_l.rows, res_l.metrics
         proj = q.effective_projection()
         nl = len(next(iter(rel_l.values()))) if rel_l else 0
         want = set(zip(*[rel_l[v].tolist() for v in proj])) if nl else set()
         # gold standard too
         gold = naive_evaluate(fed, q)
         try:
-            rel_d, m_d = dist.execute(plan)
+            res_d = dist.execute(plan)
+            rel_d, m_d = res_d.rows, res_d.metrics
         except AssertionError:
             continue  # plan shape unsupported (e.g. cartesian) — skip
         nd = len(next(iter(rel_d.values()))) if rel_d else 0

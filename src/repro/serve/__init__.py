@@ -1,4 +1,16 @@
-from repro.serve.engine import ServeEngine
-from repro.serve.query import QueryServeEngine
+from repro.serve.base import BackpressureError, ServeBase, ServeStats
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.query import QueryRequest, QueryServeEngine
+from repro.serve.scheduler import AdmissionController, ArrivalQueue
 
-__all__ = ["ServeEngine", "QueryServeEngine"]
+__all__ = [
+    "AdmissionController",
+    "ArrivalQueue",
+    "BackpressureError",
+    "QueryRequest",
+    "QueryServeEngine",
+    "Request",
+    "ServeBase",
+    "ServeEngine",
+    "ServeStats",
+]

@@ -5,6 +5,12 @@ step decodes one token for every active slot. Slot admission, greedy sampling,
 EOS retirement and per-request accounting live host-side; the device step is
 the jitted ``decode_step`` of the arch. This mirrors production TPU serving:
 a static-shaped device program + a tiny host scheduler.
+
+The engine exposes the shared serving surface (``repro.serve.base``):
+``submit(req, deadline=None)`` — the deadline budget orders slot admission
+(earliest absolute deadline first; FIFO among equals) — plus ``step()``,
+``poll()``, ``drain()``, and ``serve_stats``.  ``run_until_done`` is a
+deprecated wrapper over ``drain()``.
 """
 from __future__ import annotations
 
@@ -18,6 +24,7 @@ import numpy as np
 
 from repro.config.base import ArchConfig
 from repro.models import model as MDL
+from repro.serve.base import ServeStats, warn_run_until_done
 
 
 @dataclass
@@ -29,6 +36,7 @@ class Request:
     slot: int = -1
     done: bool = False
     truncated: bool = False          # prompt clamped to the slot cache
+    deadline: float = 0.0            # absolute admission priority (t_submit + slo)
     t_submit: float = 0.0
     t_done: float = 0.0
 
@@ -36,7 +44,8 @@ class Request:
 class ServeEngine:
     def __init__(self, cfg: ArchConfig, params, n_slots: int = 4,
                  ctx_len: int = 128, eos: int | None = None,
-                 use_prefill: bool = False, overflow: str = "reject"):
+                 use_prefill: bool = False, overflow: str = "reject",
+                 default_slo_ms: float = 60_000.0):
         if overflow not in ("reject", "truncate"):
             raise ValueError(f"overflow must be 'reject' or 'truncate', got {overflow!r}")
         self.cfg = cfg
@@ -45,6 +54,9 @@ class ServeEngine:
         self.ctx = ctx_len
         self.eos = eos
         self.overflow = overflow
+        self.default_slo = default_slo_ms * 1e-3
+        self.serve_stats = ServeStats()
+        self._reported = 0               # finished[: _reported] already returned
         # prefill admission: run the whole prompt in one full-seq pass and
         # seed the slot's cache (decoder-only archs)
         self.use_prefill = use_prefill and not cfg.encdec
@@ -59,7 +71,10 @@ class ServeEngine:
             lambda p, t: MDL.prefill_with_caches(cfg, p, t, ctx_len))
 
     # -- host scheduler ------------------------------------------------------
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request, deadline: "float | None" = None) -> None:
+        """Enqueue one request.  ``deadline`` is the request's SLO budget in
+        seconds; slot admission picks the earliest absolute deadline first
+        (FIFO among requests sharing the default)."""
         # the slot cache holds positions 0..ctx-1 and the decode loop retires
         # a slot at pos == ctx-1, so a prompt may occupy at most ctx-1 lines
         # (leaving >= 1 decode step); anything longer would run `pos` off the
@@ -74,6 +89,8 @@ class ServeEngine:
             req.prompt = req.prompt[-limit:]    # keep the newest context
             req.truncated = True
         req.t_submit = time.perf_counter()
+        slo = self.default_slo if deadline is None else float(deadline)
+        req.deadline = req.t_submit + slo
         self.queue.append(req)
 
     def _place_slot(self, slot: int, pre_caches) -> None:
@@ -93,7 +110,10 @@ class ServeEngine:
         free = [s for s in range(self.n_slots) if s not in self.active]
         while free and self.queue:
             slot = free.pop(0)
-            req = self.queue.pop(0)
+            # earliest-deadline-first; ties keep submission order (stable min)
+            nxt = min(range(len(self.queue)),
+                      key=lambda i: (self.queue[i].deadline, i))
+            req = self.queue.pop(nxt)
             req.slot = slot
             self.active[slot] = req
             self.pos[slot] = 0
@@ -114,6 +134,7 @@ class ServeEngine:
         self._admit()
         if not self.active:
             return
+        self.serve_stats.n_steps += 1
         toks = np.zeros((self.n_slots, 1), np.int32)
         for slot, req in self.active.items():
             consumed = int(self.pos[slot])
@@ -145,6 +166,7 @@ class ServeEngine:
     def _retire(self, slot: int, req: Request) -> None:
         req.done = True
         req.t_done = time.perf_counter()
+        self.serve_stats.n_served += 1
         self.finished.append(req)
         del self.active[slot]
         # reset the slot's position: `step` passes the whole `pos` vector to
@@ -153,7 +175,21 @@ class ServeEngine:
         # the stated "idle slots write at their own position 0" invariant
         self.pos[slot] = 0
 
-    def run_until_done(self, max_steps: int = 10_000) -> list[Request]:
+    def _take_new(self) -> list[Request]:
+        """Completions not yet reported by ``poll``/``drain`` — each request
+        is reported exactly once across both."""
+        out = self.finished[self._reported:]
+        self._reported = len(self.finished)
+        return out
+
+    def poll(self) -> list[Request]:
+        """Streaming completion: the requests retired since the last
+        ``poll()``/``drain()`` report.  Purely a report — ``step()`` is the
+        scheduling quantum (the query engine's ``poll`` also services ripe
+        work; here the caller drives the decode loop)."""
+        return self._take_new()
+
+    def drain(self, max_steps: int = 10_000) -> list[Request]:
         """Drain queue + active slots; returns only the requests retired by
         *this* call (``self.finished`` keeps the cumulative history — the
         sibling ``QueryServeEngine`` contract, so repeated drains never
@@ -162,14 +198,19 @@ class ServeEngine:
         Raises ``RuntimeError`` if ``max_steps`` is exhausted with work
         still pending — a partial drain must not be mistakable for a full
         one (undrained requests stay on ``self.queue``/``self.active``)."""
-        n0 = len(self.finished)
         steps = 0
         while (self.queue or self.active) and steps < max_steps:
             self.step()
             steps += 1
         if self.queue or self.active:
             raise RuntimeError(
-                f"run_until_done gave up after {max_steps} steps with "
+                f"drain gave up after {max_steps} steps with "
                 f"{len(self.queue)} queued and {len(self.active)} active "
                 f"request(s) remaining (finished stay on .finished)")
-        return self.finished[n0:]
+        return self._take_new()
+
+    def run_until_done(self, max_steps: int = 10_000) -> list[Request]:
+        """Deprecated: thin wrapper over ``drain`` (same return value, same
+        partial-drain ``RuntimeError`` contract)."""
+        warn_run_until_done(type(self).__name__)
+        return self.drain(max_steps=max_steps)

@@ -39,7 +39,7 @@ def _tp(s, p, o):
 
 
 def _engine_rows(fed, plan, q):
-    rel, _ = LocalEngine(fed).execute(plan)
+    rel = LocalEngine(fed).execute(plan).rows
     proj = q.effective_projection()
     n = len(next(iter(rel.values()))) if rel else 0
     return set(zip(*[rel[v].tolist() for v in proj])) if n else set()

@@ -102,8 +102,8 @@ def test_optimize_batch_matches_sequential_mixed_shapes(tiny_fed, tiny_stats,
         if key in seen:
             continue
         seen.add(key)
-        rl, _ = eng.execute(pl)
-        rb, _ = eng.execute(pb)
+        rl = eng.execute(pl).rows
+        rb = eng.execute(pb).rows
         for v in q.effective_projection():
             assert rl[v].tobytes() == rb[v].tobytes()
 

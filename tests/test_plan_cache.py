@@ -10,7 +10,7 @@ from repro.query.algebra import BGPQuery, Const, TriplePattern, Var
 
 
 def _results(fed, plan, q):
-    rel, _ = LocalEngine(fed).execute(plan)
+    rel = LocalEngine(fed).execute(plan).rows
     proj = q.effective_projection()
     return {v: rel[v] for v in proj}
 

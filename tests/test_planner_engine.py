@@ -38,7 +38,8 @@ def test_all_optimizers_complete_results(small_fed, workload, engines):
         want = naive_evaluate(fed, q)
         for name, opt in engines.items():
             plan = opt.optimize(q)
-            rel, m = eng.execute(plan)
+            res = eng.execute(plan)
+            rel, m = res.rows, res.metrics
             got = _result_set(rel, q.effective_projection())
             assert got == want, f"{name} incomplete/incorrect on {q.name}"
 
@@ -52,7 +53,8 @@ def test_odyssey_plan_quality(small_fed, workload, engines):
     for q in workload:
         for name, opt in engines.items():
             plan = opt.optimize(q)
-            rel, m = eng.execute(plan)
+            res = eng.execute(plan)
+            rel, m = res.rows, res.metrics
             agg[name]["ntt"] += m.transferred_tuples
             agg[name]["nsq"] += plan.n_subqueries
             agg[name]["nss"] += plan.n_selected_sources
@@ -72,7 +74,7 @@ def test_source_selection_no_false_negatives(small_fed, small_stats, workload):
     eng = LocalEngine(fed)
     for q in workload:
         plan = opt.optimize(q)
-        rel, _ = eng.execute(plan)
+        rel = eng.execute(plan).rows
         got = _result_set(rel, q.effective_projection())
         want = naive_evaluate(fed, q)
         assert want <= got and got == want
@@ -86,7 +88,7 @@ def test_distinct_and_projection(small_fed, small_stats, workload):
         if not q.distinct:
             continue
         plan = opt.optimize(q)
-        rel, _ = eng.execute(plan)
+        rel = eng.execute(plan).rows
         proj = q.effective_projection()
         assert set(rel.keys()) == set(proj)
         rows = list(zip(*[rel[v].tolist() for v in proj])) if rel and len(rel[proj[0]]) else []

@@ -181,3 +181,49 @@ def test_serve_run_until_done_raises_on_partial_drain(small_lm):
     assert eng.queue or eng.active                    # work preserved
     done = eng.run_until_done()                       # finishes cleanly
     assert [r.rid for r in done] == [0]
+
+def test_serve_deadline_orders_admission(small_lm):
+    """EDF slot admission: with one slot, a later-submitted request with a
+    tighter SLO budget is admitted (and finishes) before an earlier patient
+    one; equal deadlines keep submission order."""
+    cfg, params = small_lm
+    eng = ServeEngine(cfg, params, n_slots=1, ctx_len=64)
+    eng.submit(Request(rid=0, prompt=[5], max_new=2), deadline=1e6)
+    eng.submit(Request(rid=1, prompt=[9], max_new=2), deadline=0.001)
+    eng.submit(Request(rid=2, prompt=[7], max_new=2), deadline=1e6)
+    done = eng.drain()
+    assert [r.rid for r in done] == [1, 0, 2]
+    assert eng.serve_stats.n_served == 3
+    assert eng.serve_stats.n_steps > 0
+
+
+def test_serve_poll_and_drain_report_exactly_once(small_lm):
+    """The shared streaming surface on the token engine: ``poll`` after each
+    ``step`` reports each retirement exactly once; ``drain`` reports only
+    what it retired itself; ``run_until_done`` warns but still works."""
+    cfg, params = small_lm
+    eng = ServeEngine(cfg, params, n_slots=2, ctx_len=64)
+    for i in range(3):
+        eng.submit(Request(rid=i, prompt=[i + 1], max_new=2))
+    seen: list[int] = []
+    for _ in range(50):
+        eng.step()
+        seen.extend(r.rid for r in eng.poll())
+        if not (eng.queue or eng.active):
+            break
+    assert sorted(seen) == [0, 1, 2]
+    assert eng.poll() == [] and eng.drain() == []
+    eng.submit(Request(rid=3, prompt=[4], max_new=2))
+    with pytest.warns(DeprecationWarning, match="drain"):
+        done = eng.run_until_done()
+    assert [r.rid for r in done] == [3]
+    assert [r.rid for r in eng.finished] == sorted(seen) + [3]
+
+
+def test_serve_engines_share_the_serve_base_surface(small_lm):
+    from repro.serve import ServeBase, ServeStats
+
+    cfg, params = small_lm
+    eng = ServeEngine(cfg, params, n_slots=1, ctx_len=16)
+    assert isinstance(eng, ServeBase)
+    assert isinstance(eng.serve_stats, ServeStats)
