@@ -37,6 +37,7 @@ HIGHER_IS_BETTER = {
     "dp_sweep_jax_vs_numpy_x": True,
     "extended_completeness": True,
     "serve_throughput_x": True,
+    "failover_salvage_x": True,
     "peak_rss_mb": False,
 }
 
@@ -50,6 +51,7 @@ def main() -> None:
 
     from benchmarks import fedbench_figs as F
     from benchmarks import (
+        adaptive_bench,
         kernel_bench,
         planner_bench,
         roofline_bench,
@@ -98,6 +100,10 @@ def main() -> None:
     add(serve_bench.run(scale, quick=args.quick))
     # --quick also asserts incremental failover >= 3x full rebuild
     add(stats_refresh_bench.run(scale, assert_speedup=args.quick))
+    # mid-query endpoint death: pipeline salvage vs exclude-and-replan —
+    # guarded recovery-cost multiple (hard floor 1.0: keeping the shipped
+    # operator state must never cost more than re-executing from scratch)
+    add(adaptive_bench.run(scale, quick=args.quick))
     add(kernel_bench.run())
     add(roofline_bench.run())
     metrics["peak_rss_mb"] = _peak_rss_mb()

@@ -223,3 +223,14 @@ class CostModel:
                        + iw * card_out)
         is_bind = bindable_b & (bc < hc)
         return jnp.where(is_bind, bc, hc), is_bind
+
+
+def estimation_error(est: float, obs: float) -> float:
+    """Symmetric log-scale q-error between an estimated and an observed
+    cardinality: ``|log2((obs + 1) / (est + 1))|``.  The ``+1`` keeps zero
+    cardinalities finite, and the log makes over- and under-estimation by the
+    same factor score identically — an error of 1.0 means "off by 2x", 2.0
+    means "off by 4x".  This is the score ``repro.stats.feedback`` averages
+    per source to decide when observed executions have drifted far enough
+    from the statistics to warrant a ``refresh_source``."""
+    return abs(float(np.log2((float(obs) + 1.0) / (float(est) + 1.0))))

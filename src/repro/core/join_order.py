@@ -140,6 +140,32 @@ def star_cardinality(star: Star, stats: FederatedStats, sel: SourceSelection,
     return total
 
 
+def star_source_cardinalities(star: Star, stats: FederatedStats,
+                              sel: SourceSelection, distinct: bool,
+                              sources: "list[int]") -> "list[float]":
+    """Per-source split of ``star_cardinality`` over ``sources`` — the
+    estimate each endpoint's scan of this star is expected to ship, the
+    baseline the pipeline's observed-cardinality feedback scores endpoints
+    against.  The raw per-source formula-1/2 totals are scaled so they sum to
+    the star's memoized (factor-adjusted) cardinality; every per-CS term is a
+    cache hit after the DP already priced the star."""
+    preds = star.bound_preds()
+    per: "list[float]" = []
+    for s in sources:
+        rel = sel.star_cs[star.idx].get(s)
+        cs = stats.cs[s]
+        if rel is None:
+            rel = cs.relevant_cs(preds)
+        else:
+            rel = np.intersect1d(rel, cs.relevant_cs(preds), assume_unique=False)
+        per.append(star_cardinality_distinct_cached(cs, preds, rel) if distinct
+                   else star_cardinality_estimate_cached(cs, preds, rel))
+    total = star_cardinality(star, stats, sel, distinct)
+    raw = sum(per)
+    scale = (total / raw) if raw > 0 else 0.0
+    return [p * scale for p in per]
+
+
 def order_star_patterns(star: Star, stats: FederatedStats, sel: SourceSelection,
                         distinct: bool) -> list[TriplePattern]:
     """§3.1 greedy: drop the pattern absent from the cheapest (k-1)-subset."""

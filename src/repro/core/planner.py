@@ -41,6 +41,7 @@ from repro.core.join_order import (
     JoinTree,
     dp_join_order,
     order_star_patterns,
+    star_source_cardinalities,
 )
 from repro.core.source_selection import (
     SourceSelection,
@@ -85,6 +86,9 @@ class SubqueryNode(PlanNode):
     patterns: list[TriplePattern]            # in execution order
     sources: list[int]
     est_cardinality: float = 0.0
+    # per-source expected rows, aligned with ``sources`` — what the pipeline
+    # scores each endpoint's observed scan cardinality against (feedback)
+    est_source_cards: "list[float] | None" = None
 
 
 @dataclass
@@ -318,7 +322,9 @@ def _copy_node(node: PlanNode) -> PlanNode:
     if isinstance(node, SubqueryNode):
         return SubqueryNode(stars=list(node.stars), patterns=list(node.patterns),
                             sources=list(node.sources),
-                            est_cardinality=node.est_cardinality)
+                            est_cardinality=node.est_cardinality,
+                            est_source_cards=(None if node.est_source_cards is None
+                                              else list(node.est_source_cards)))
     if isinstance(node, LeftJoinPlanNode):
         return LeftJoinPlanNode(left=_copy_node(node.left),
                                 right=_copy_node(node.right),
@@ -358,7 +364,9 @@ def _rename_node(node: PlanNode, ren: dict[str, str]) -> PlanNode:
                               _rename_term(tp.o, ren)) for tp in node.patterns]
         return SubqueryNode(stars=list(node.stars), patterns=pats,
                             sources=list(node.sources),
-                            est_cardinality=node.est_cardinality)
+                            est_cardinality=node.est_cardinality,
+                            est_source_cards=(None if node.est_source_cards is None
+                                              else list(node.est_source_cards)))
     if isinstance(node, LeftJoinPlanNode):
         return LeftJoinPlanNode(left=_rename_node(node.left, ren),
                                 right=_rename_node(node.right, ren),
@@ -588,8 +596,20 @@ class OdysseyOptimizer:
                 patterns.extend(order_star_patterns(graph.stars[si], self.stats, sel,
                                                     query.distinct))
             sources = tree.sources if tree.sources is not None else sel.star_sources[stars[0]]
-            return SubqueryNode(stars=stars, patterns=patterns, sources=list(sources),
-                                est_cardinality=tree.cardinality)
+            sources = list(sources)
+            # estimate plumb-through for the pipeline's cardinality feedback:
+            # a single-star leaf gets the per-source split of its star
+            # cardinality; a merged exclusive group joins remotely, so the
+            # best attribution is an even split of the group estimate
+            if len(stars) == 1:
+                per = star_source_cardinalities(graph.stars[stars[0]], self.stats,
+                                                sel, query.distinct, sources)
+            else:
+                n = max(1, len(sources))
+                per = [tree.cardinality / n] * len(sources)
+            return SubqueryNode(stars=stars, patterns=patterns, sources=sources,
+                                est_cardinality=tree.cardinality,
+                                est_source_cards=per)
         left = self._emit(tree.left, graph, sel, query)    # type: ignore[arg-type]
         right = self._emit(tree.right, graph, sel, query)  # type: ignore[arg-type]
         join_vars = sorted(_vars_of(left) & _vars_of(right))

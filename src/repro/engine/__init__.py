@@ -1,3 +1,25 @@
-from repro.engine.local import LocalEngine, ExecutionMetrics, naive_evaluate
+from repro.engine.local import (
+    ExecutionMetrics,
+    ExecutionResult,
+    LocalEngine,
+    naive_evaluate,
+)
+from repro.engine.pipeline import (
+    CardObservation,
+    PipelineExecution,
+    SourceChannel,
+    VirtualClock,
+    compile_plan,
+)
 
-__all__ = ["LocalEngine", "ExecutionMetrics", "naive_evaluate"]
+__all__ = [
+    "LocalEngine",
+    "ExecutionMetrics",
+    "ExecutionResult",
+    "naive_evaluate",
+    "CardObservation",
+    "PipelineExecution",
+    "SourceChannel",
+    "VirtualClock",
+    "compile_plan",
+]

@@ -21,6 +21,7 @@ the host, which retries with doubled capacity.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 from functools import partial
 
@@ -45,6 +46,23 @@ except (ImportError, TypeError):  # pragma: no cover
 from repro.core.planner import JoinPlanNode, PhysicalPlan, PlanNode, SubqueryNode
 from repro.engine import operators as ops
 from repro.engine.local import ExecutionResult
+
+
+class AlgebraFallbackWarning(UserWarning):
+    """The SPMD engine received an OPTIONAL/UNION/FILTER plan and degraded it
+    to ``LocalEngine`` instead of failing (``ExecutionResult.fallback`` names
+    the substitution).  Filterable: the fallback changes *where* the plan
+    runs, never its rows."""
+
+
+def _has_algebra_nodes(node: PlanNode) -> bool:
+    """True iff the plan tree contains any non-conjunctive operator (the
+    forms ``_eval_node`` deliberately rejects)."""
+    if isinstance(node, SubqueryNode):
+        return False
+    if isinstance(node, JoinPlanNode):
+        return _has_algebra_nodes(node.left) or _has_algebra_nodes(node.right)
+    return True
 from repro.query.algebra import Const, TriplePattern, Var
 from repro.rdf.dataset import Federation
 
@@ -343,6 +361,23 @@ class DistributedEngine:
         return out
 
     def execute(self, plan: PhysicalPlan) -> ExecutionResult:
+        if _has_algebra_nodes(plan.root):
+            # degrade, don't die: the SPMD kernels are conjunctive-only
+            # (``_eval_node`` still raises -- that contract is pinned), so
+            # OPTIONAL/UNION/FILTER plans run on the host engine with the
+            # substitution named on the result instead of surfacing a bare
+            # NotImplementedError to serving code
+            import warnings
+
+            from repro.engine.local import LocalEngine
+
+            warnings.warn(
+                "SPMD engine received an OPTIONAL/UNION/FILTER plan; "
+                "degrading to LocalEngine (result.fallback = "
+                "'local:algebra'; rows are identical, DistMetrics are not "
+                "collected)", AlgebraFallbackWarning, stacklevel=2)
+            res = LocalEngine(self.fed).execute(plan)
+            return dataclasses.replace(res, fallback="local:algebra")
         metrics = DistMetrics()
         rel = self._eval_node(plan.root, metrics)
         data, valid = self._collect_fn(len(rel.columns))(rel.data, rel.valid)

@@ -130,6 +130,81 @@ def filter_mask(expr: Expr, rel: Relation) -> np.ndarray:
     return ~filter_mask(expr.part, rel)
 
 
+def join_indices(left: Relation,
+                 right: Relation) -> "tuple[np.ndarray, np.ndarray]":
+    """Row-index pairs ``(li, ri)`` of the inner join on the shared
+    variables (cartesian when disjoint).  Emission order is canonical:
+    ``li`` ascending, and within one ``li`` the ``ri`` ascending — the
+    stable argsort keeps equal-key runs in original order — which is the
+    order the operator pipeline reproduces by sorting accumulated pairs."""
+    shared = sorted(set(left) & set(right))
+    nl, nr = _nrows(left), _nrows(right)
+    if not shared:  # cartesian
+        li = np.repeat(np.arange(nl), nr)
+        ri = np.tile(np.arange(nr), nl)
+    else:
+        lk = np.stack([left[v].astype(np.int64) for v in shared], axis=1)
+        rk = np.stack([right[v].astype(np.int64) for v in shared], axis=1)
+        # sort-merge on packed keys
+        def pack(a: np.ndarray) -> np.ndarray:
+            h = np.zeros(len(a), np.int64)
+            for c in range(a.shape[1]):
+                h = h * 1_000_003 + a[:, c]
+            return h
+        hl, hr = pack(lk), pack(rk)
+        order_r = np.argsort(hr, kind="stable")
+        hr_s = hr[order_r]
+        lo = np.searchsorted(hr_s, hl, side="left")
+        hi = np.searchsorted(hr_s, hl, side="right")
+        cnt = hi - lo
+        li = np.repeat(np.arange(nl), cnt)
+        ri_pos = np.concatenate([np.arange(l, h) for l, h in zip(lo, hi)]) if cnt.sum() else np.zeros(0, np.int64)
+        ri = order_r[ri_pos.astype(np.int64)]
+        if shared and len(li):
+            # guard against packed-hash collisions: verify equality
+            ok = np.ones(len(li), bool)
+            for v in shared:
+                ok &= left[v][li] == right[v][ri]
+            li, ri = li[ok], ri[ok]
+    return li, ri
+
+
+def join_rels(left: Relation, right: Relation) -> Relation:
+    if not left:
+        return right
+    if not right:
+        return left
+    li, ri = join_indices(left, right)
+    out: Relation = {}
+    for v in left:
+        out[v] = left[v][li]
+    for v in right:
+        if v not in out:
+            out[v] = right[v][ri]
+    return out
+
+
+def left_join_rels(left: Relation, right: Relation) -> Relation:
+    """OPTIONAL: the inner join plus every unmatched left row, right-only
+    columns padded with UNDEF."""
+    if not left:
+        return right
+    if not right:
+        return left
+    li, ri = join_indices(left, right)
+    matched = np.zeros(_nrows(left), bool)
+    matched[li] = True
+    un = np.nonzero(~matched)[0]
+    out: Relation = {}
+    for v in left:
+        out[v] = np.concatenate([left[v][li], left[v][un]])
+    for v in right:
+        if v not in out:
+            out[v] = np.concatenate(
+                [right[v][ri], np.full(len(un), UNDEF, right[v].dtype)])
+    return out
+
+
 @dataclass
 class ExecutionMetrics:
     transferred_tuples: int = 0        # endpoint -> engine rows (NTT)
@@ -151,12 +226,21 @@ class ExecutionResult:
     tuple, so out-of-tree ``rows, m = engine.execute(plan)`` callers keep
     working (with a ``DeprecationWarning``) instead of breaking.  Prefer
     the named fields.
+
+    ``card_log`` carries the pipeline's observed-vs-estimated cardinality
+    samples (``repro.engine.pipeline.CardObservation``; empty on the legacy
+    recursive path) — the signal ``repro.stats.feedback`` turns into
+    triggered ``refresh_source`` calls.  ``fallback`` names the engine
+    substitution, if any, that produced this result (e.g. the distributed
+    engine degrading an algebra plan to ``LocalEngine``).
     """
 
     rows: Relation
     metrics: object
     plan: "PhysicalPlan | None" = None
     stats_epoch: int = 0
+    card_log: tuple = ()
+    fallback: "str | None" = None
 
     def __iter__(self):
         warnings.warn(
@@ -167,8 +251,28 @@ class ExecutionResult:
 
 
 class LocalEngine:
-    def __init__(self, fed: Federation):
+    """Host execution engine.
+
+    ``execute`` lowers the plan onto the adaptive operator pipeline
+    (``repro.engine.pipeline``) — bit-identical rows and NTT/request metrics
+    to the original recursive evaluator, which survives as
+    ``execute_recursive`` (``use_pipeline=False`` routes everything there)
+    and remains the differential oracle of the pipeline tests.
+
+    ``scan_policy`` is the pipeline's dispatch order (``"static"`` |
+    ``"adaptive"`` | ``"random"``); ``clock`` an optional virtual clock for
+    deterministic latency simulation.  Plain ``LocalEngine`` ignores
+    injected faults (``honor_faults=False``); ``FailoverEngine`` flips it.
+    """
+
+    honor_faults = False
+
+    def __init__(self, fed: Federation, use_pipeline: bool = True,
+                 scan_policy: str = "static", clock=None):
         self.fed = fed
+        self.use_pipeline = use_pipeline
+        self.scan_policy = scan_policy
+        self.clock = clock
 
     # -- pattern / star evaluation at one endpoint ---------------------------
     def _eval_pattern(self, src: Source, tp: TriplePattern,
@@ -214,75 +318,16 @@ class LocalEngine:
         matches = _concat(parts) if parts else _empty(out_vars)
         return self._join(bindings, matches)
 
-    # -- generic hash join ----------------------------------------------------
+    # -- generic hash join (module-level helpers, shared with the pipeline) --
     def _join_indices(self, left: Relation,
                       right: Relation) -> "tuple[np.ndarray, np.ndarray]":
-        """Row-index pairs ``(li, ri)`` of the inner join on the shared
-        variables (cartesian when disjoint)."""
-        shared = sorted(set(left) & set(right))
-        nl, nr = _nrows(left), _nrows(right)
-        if not shared:  # cartesian
-            li = np.repeat(np.arange(nl), nr)
-            ri = np.tile(np.arange(nr), nl)
-        else:
-            lk = np.stack([left[v].astype(np.int64) for v in shared], axis=1)
-            rk = np.stack([right[v].astype(np.int64) for v in shared], axis=1)
-            # sort-merge on packed keys
-            def pack(a: np.ndarray) -> np.ndarray:
-                h = np.zeros(len(a), np.int64)
-                for c in range(a.shape[1]):
-                    h = h * 1_000_003 + a[:, c]
-                return h
-            hl, hr = pack(lk), pack(rk)
-            order_r = np.argsort(hr, kind="stable")
-            hr_s = hr[order_r]
-            lo = np.searchsorted(hr_s, hl, side="left")
-            hi = np.searchsorted(hr_s, hl, side="right")
-            cnt = hi - lo
-            li = np.repeat(np.arange(nl), cnt)
-            ri_pos = np.concatenate([np.arange(l, h) for l, h in zip(lo, hi)]) if cnt.sum() else np.zeros(0, np.int64)
-            ri = order_r[ri_pos.astype(np.int64)]
-            if shared and len(li):
-                # guard against packed-hash collisions: verify equality
-                ok = np.ones(len(li), bool)
-                for v in shared:
-                    ok &= left[v][li] == right[v][ri]
-                li, ri = li[ok], ri[ok]
-        return li, ri
+        return join_indices(left, right)
 
     def _join(self, left: Relation, right: Relation) -> Relation:
-        if not left:
-            return right
-        if not right:
-            return left
-        li, ri = self._join_indices(left, right)
-        out: Relation = {}
-        for v in left:
-            out[v] = left[v][li]
-        for v in right:
-            if v not in out:
-                out[v] = right[v][ri]
-        return out
+        return join_rels(left, right)
 
     def _left_join(self, left: Relation, right: Relation) -> Relation:
-        """OPTIONAL: the inner join plus every unmatched left row, right-only
-        columns padded with UNDEF."""
-        if not left:
-            return right
-        if not right:
-            return left
-        li, ri = self._join_indices(left, right)
-        matched = np.zeros(_nrows(left), bool)
-        matched[li] = True
-        un = np.nonzero(~matched)[0]
-        out: Relation = {}
-        for v in left:
-            out[v] = np.concatenate([left[v][li], left[v][un]])
-        for v in right:
-            if v not in out:
-                out[v] = np.concatenate(
-                    [right[v][ri], np.full(len(un), UNDEF, right[v].dtype)])
-        return out
+        return left_join_rels(left, right)
 
     def _eval_subquery(self, node: SubqueryNode, metrics: ExecutionMetrics,
                        bindings: Relation | None = None) -> Relation:
@@ -342,6 +387,16 @@ class LocalEngine:
         return self._join(left, right)
 
     def execute(self, plan: PhysicalPlan) -> ExecutionResult:
+        if self.use_pipeline:
+            from repro.engine.pipeline import compile_plan
+            exec_ = compile_plan(plan, self.fed, honor_faults=self.honor_faults,
+                                 policy=self.scan_policy, clock=self.clock)
+            return exec_.run()
+        return self.execute_recursive(plan)
+
+    def execute_recursive(self, plan: PhysicalPlan) -> ExecutionResult:
+        """The original monolithic recursive evaluator — the pipeline's
+        differential oracle (bit-identical rows and metrics by contract)."""
         metrics = ExecutionMetrics()
         t0 = time.perf_counter()
         rel = self._execute(plan.root, metrics)

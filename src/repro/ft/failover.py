@@ -12,6 +12,13 @@ plans, so a templated workload re-warms the plan cache after the first
 replan instead of losing it.  Recovery is symmetric: ``restore`` re-adds a
 source incrementally (``add_source``).
 
+Since the operator-pipeline refactor (docs/execution.md) a death
+*mid-execution* is cheaper still: the session salvages the pipeline's
+already-produced operator state — only the dead endpoint's scans drop (or
+re-route to an alternate relevant source), no completed scan re-executes —
+instead of replanning and re-running the query from scratch
+(``salvage=False`` restores the legacy loop).
+
 Source selection runs again without the dead source, so the
 no-false-negative guarantee holds **relative to the live data** and the
 result is flagged partial (the honest contract; silently complete-looking
@@ -34,12 +41,32 @@ class EndpointDown(RuntimeError):
 
 
 class FlakySource(Source):
-    """Test/simulation wrapper: raises for the first ``fail_times`` scans."""
+    """Test/simulation fault- and latency-injection wrapper.
 
-    def __init__(self, src: Source, fail_times: int = 0, dead: bool = False):
+    Three failure axes, all deterministic:
+
+    * ``fail_times`` — ``check()`` raises for the first N dispatches
+      (transient outage, healed by a retry);
+    * ``dead`` — ``check()`` always raises (hard death at dispatch);
+    * ``die_after_tuples`` — ``note_tuples()`` flips ``dead`` and raises the
+      moment the endpoint has served more than N tuples (death *mid-scan*:
+      earlier completed scans stay shipped, the crossing scan is lost).
+
+    ``latency_s`` is a deterministic per-scan latency the pipeline's
+    ``SourceChannel`` charges to an injectable virtual clock (no wall-clock
+    sleeps — the pattern of ``tests/test_serve_scheduler.py``), which is what
+    makes adaptive-vs-static routing measurable.
+    """
+
+    def __init__(self, src: Source, fail_times: int = 0, dead: bool = False,
+                 die_after_tuples: "int | None" = None,
+                 latency_s: float = 0.0):
         super().__init__(src.name, src.table, src.sid)
         self._fails_left = fail_times
         self.dead = dead
+        self.die_after_tuples = die_after_tuples
+        self.latency_s = latency_s
+        self.tuples_served = 0
 
     def check(self) -> None:
         if self.dead:
@@ -48,9 +75,24 @@ class FlakySource(Source):
             self._fails_left -= 1
             raise EndpointDown(f"{self.name} (transient)")
 
+    def note_tuples(self, n: int) -> None:
+        """Physical-scan accounting hook (called by ``SourceChannel`` per
+        cache-missing scan); the mid-scan death trigger."""
+        self.tuples_served += n
+        if (self.die_after_tuples is not None
+                and self.tuples_served > self.die_after_tuples):
+            self.dead = True
+            raise EndpointDown(
+                f"{self.name} (died mid-scan after {self.die_after_tuples} "
+                f"tuples)")
+
 
 class FailoverEngine(LocalEngine):
-    """LocalEngine that honors FlakySource failures at dispatch time."""
+    """LocalEngine that honors FlakySource failures.  On the pipeline path
+    the ``SourceChannel`` enforces faults per scan task (``honor_faults``);
+    the recursive path keeps the legacy whole-subquery dispatch check."""
+
+    honor_faults = True
 
     def _eval_subquery(self, node, metrics, bindings=None):
         for sid in node.sources:
@@ -67,8 +109,15 @@ class FailoverResult:
     partial: bool                 # True => some endpoint was excluded
     excluded: list[str]
     replans: int = 0
+    salvages: int = 0             # mid-query salvages (operator state kept)
     cache_hit: bool = False       # plan served from the optimizer's plan cache
     stats_epoch: int = 0          # statistics epoch the answer was planned under
+    rerouted: "list[tuple[str, str]]" = None  # (dead, alternate) re-routes
+    card_log: tuple = ()          # observed-vs-estimated cardinality samples
+
+    def __post_init__(self):
+        if self.rerouted is None:
+            self.rerouted = []
 
 
 class FailoverSession:
@@ -82,10 +131,13 @@ class FailoverSession:
     """
 
     def __init__(self, fed: Federation, stats: FederatedStats,
-                 retry: RetryPolicy | None = None, clone_stats: bool = True):
+                 retry: RetryPolicy | None = None, clone_stats: bool = True,
+                 salvage: bool = True, scan_policy: str = "static"):
         self.retry = retry or RetryPolicy(max_attempts=3, base_delay_s=0.001)
         self.optimizer = OdysseyOptimizer(stats.clone() if clone_stats else stats)
         self.fed = fed
+        self.salvage = salvage
+        self.scan_policy = scan_policy
         self.excluded: list[str] = []
         self._all_sources: dict[str, Source] = {s.name: s for s in fed.sources}
         self._base_sources: list[Source] = list(fed.sources)
@@ -94,25 +146,47 @@ class FailoverSession:
     def stats(self) -> FederatedStats:
         return self.optimizer.stats
 
+    def _compile(self, plan: PhysicalPlan, fed: Federation):
+        from repro.engine.pipeline import compile_plan
+        return compile_plan(plan, fed, honor_faults=True,
+                            policy=self.scan_policy)
+
     def execute(self, query: BGPQuery) -> FailoverResult:
-        replans = 0
+        """Execute with mid-query salvage: an endpoint death keeps the
+        pipeline's already-produced operator state (no completed scan is
+        re-executed — the dead endpoint's scans drop or re-route) instead of
+        replanning from scratch.  ``salvage=False`` restores the legacy
+        exclude-and-replan loop.  ``partial``/``excluded`` semantics are
+        identical either way."""
+        replans = salvages = 0
+        plan = self.optimizer.optimize(query)
+        exec_ = self._compile(plan, self.fed)
         while True:
-            plan = self.optimizer.optimize(query)
-            engine = FailoverEngine(self.fed)
             try:
-                res = self.retry.run(engine.execute, plan)
+                res = self.retry.run(exec_.run)
                 return FailoverResult(rows=res.rows, metrics=res.metrics,
                                       partial=bool(self.excluded),
                                       excluded=list(self.excluded),
-                                      replans=replans, cache_hit=plan.cached,
-                                      stats_epoch=self.stats.epoch)
+                                      replans=replans, salvages=salvages,
+                                      cache_hit=plan.cached,
+                                      stats_epoch=self.stats.epoch,
+                                      rerouted=list(exec_.rerouted),
+                                      card_log=res.card_log)
             except RuntimeError:
-                # a dead endpoint survived retries: exclude it and re-plan
+                # a dead endpoint survived retries
                 sid = self._find_dead()
                 if sid is None:
                     raise
-                self.exclude(sid)
-                replans += 1
+                name = self.exclude(sid)
+                if self.salvage:
+                    # drop/re-route only the dead endpoint's scans; survivors'
+                    # shipped parts stay salvaged inside the execution
+                    exec_.drop_source(name)
+                    salvages += 1
+                else:
+                    replans += 1
+                    plan = self.optimizer.optimize(query)
+                    exec_ = self._compile(plan, self.fed)
 
     def execute_batch(self, queries: "list[BGPQuery]") -> "list[FailoverResult]":
         """Failover-aware batch execution on the truly batched planner: the
@@ -122,7 +196,9 @@ class FailoverSession:
         and the *remaining* queries are replanned as a (smaller) batch under
         the new epoch — completed queries keep their results, so a mid-batch
         death costs one exclusion plus one batched replan, not per-query
-        rebuilds.
+        rebuilds.  With ``salvage`` (the default) the query that was running
+        when the endpoint died additionally completes on its salvaged
+        operator state instead of joining the replan.
 
         A ``RuntimeError`` with no dead endpoint to blame propagates and the
         call is all-or-nothing — the same contract as the sequential
@@ -134,28 +210,44 @@ class FailoverSession:
         replans = 0
         while pending:
             plans = self.optimizer.optimize_batch([queries[i] for i in pending])
-            engine = FailoverEngine(self.fed)
+            fed_now = self.fed          # the federation these plans address
             still: list[int] = []
             excluded_now = False
             for i, plan in zip(pending, plans):
                 if excluded_now:
                     still.append(i)       # replan under the new epoch
                     continue
-                try:
-                    res = self.retry.run(engine.execute, plan)
-                    results[i] = FailoverResult(
-                        rows=res.rows, metrics=res.metrics,
-                        partial=bool(self.excluded),
-                        excluded=list(self.excluded), replans=replans,
-                        cache_hit=plan.cached, stats_epoch=plan.stats_epoch)
-                except RuntimeError:
-                    sid = self._find_dead()
-                    if sid is None:
-                        raise
-                    self.exclude(sid)
-                    excluded_now = True
-                    replans += 1
-                    still.append(i)
+                exec_ = self._compile(plan, fed_now)
+                while True:
+                    try:
+                        res = self.retry.run(exec_.run)
+                    except RuntimeError:
+                        sid = self._find_dead()
+                        if sid is None:
+                            raise
+                        name = self.exclude(sid)
+                        excluded_now = True
+                        replans += 1      # the remainder replans either way
+                        if self.salvage:
+                            # finish *this* query on its salvaged operator
+                            # state; the rest of the batch replans under the
+                            # new epoch (their plans still address the dead
+                            # endpoint)
+                            exec_.drop_source(name)
+                            continue
+                        still.append(i)
+                        res = None
+                        break
+                    break
+                if res is None:
+                    continue
+                results[i] = FailoverResult(
+                    rows=res.rows, metrics=res.metrics,
+                    partial=bool(self.excluded),
+                    excluded=list(self.excluded), replans=replans,
+                    salvages=exec_.salvages, cache_hit=plan.cached,
+                    stats_epoch=plan.stats_epoch,
+                    rerouted=list(exec_.rerouted), card_log=res.card_log)
             pending = still
         return results      # type: ignore[return-value]
 

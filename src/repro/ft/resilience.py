@@ -18,9 +18,14 @@ from dataclasses import dataclass, field
 
 @dataclass
 class RetryPolicy:
+    """Exponential-backoff retry.  ``sleep`` is injectable (a virtual clock's
+    ``advance``, or a no-op) so fault-injection tests and benchmarks retry
+    deterministically without wall-clock sleeps."""
+
     max_attempts: int = 3
     base_delay_s: float = 0.05
     backoff: float = 2.0
+    sleep: "object" = time.sleep
 
     def run(self, fn, *args, on_retry=None, **kw):
         delay = self.base_delay_s
@@ -36,7 +41,7 @@ class RetryPolicy:
                 if on_retry is not None:
                     on_retry(attempt, exc)
                 if attempt + 1 < self.max_attempts:
-                    time.sleep(delay)
+                    self.sleep(delay)
                     delay *= self.backoff
         raise RuntimeError(f"retries exhausted: {last_exc}") from last_exc
 

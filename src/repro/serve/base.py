@@ -51,6 +51,7 @@ class ServeStats:
     plan_cache_hits: int = 0           # incl. in-batch exact duplicates
     n_planned: int = 0                 # requests that ran the full pipeline
     n_shapes: int = 0                  # shape groups swept (summed over steps)
+    n_stats_refreshes: int = 0         # feedback-triggered refresh_source calls
     plan_ms: float = 0.0
     exec_ms: float = 0.0
 

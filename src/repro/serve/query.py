@@ -114,6 +114,7 @@ class QueryServeEngine:
                  backpressure: str = "reject",
                  pipeline: bool = False,
                  handoff_depth: int = 2,
+                 feedback=None,
                  clock=time.perf_counter):
         if admission not in ("affinity", "arrival"):
             raise ValueError(f"admission must be 'affinity' or 'arrival', "
@@ -132,6 +133,11 @@ class QueryServeEngine:
                                           plan_cache_size=plan_cache_size,
                                           dp_backend=dp_backend)
         self.engine = engine if engine is not None else LocalEngine(fed)
+        # optional repro.stats.feedback.CardinalityFeedback: executions feed
+        # observed cardinalities in (_execute_batch, any thread), and drifted
+        # sources are refreshed at the top of the next planning batch
+        # (_plan_batch — the only code that touches the optimizer/statistics)
+        self.feedback = feedback
         self.max_batch = max_batch
         self.admission = admission
         self.default_slo = default_slo_ms * 1e-3
@@ -217,6 +223,14 @@ class QueryServeEngine:
         """Plan one admitted batch through ``optimize_batch`` and stamp
         per-request attribution.  In pipeline mode this runs on the worker
         thread (the only thread that touches the optimizer)."""
+        if self.feedback is not None:
+            # planner thread == the only safe place to mutate the statistics;
+            # each refresh bumps the epoch, so the plan cache retires exactly
+            # the entries priced under the drifted source
+            applied = self.feedback.apply_pending()
+            if applied:
+                with self._cond:
+                    self.serve_stats.n_stats_refreshes += len(applied)
         t0 = self._clock()
         plans = self.optimizer.optimize_batch([r.query for r in batch])
         t1 = self._clock()
@@ -248,6 +262,8 @@ class QueryServeEngine:
         for req in batch:
             res = self.engine.execute(req.plan)
             req.rows, req.metrics = res.rows, res.metrics
+            if self.feedback is not None:
+                self.feedback.observe_result(res)   # thread-safe
             req.done = True
             req.t_done = self._clock()
         with self._cond:

@@ -1,4 +1,6 @@
-from repro.stats.void import VoidStats, compute_void
+from repro.stats.feedback import CardinalityFeedback, SourceDrift
 from repro.stats.reduce import reduce_cs
+from repro.stats.void import VoidStats, compute_void
 
-__all__ = ["VoidStats", "compute_void", "reduce_cs"]
+__all__ = ["CardinalityFeedback", "SourceDrift", "VoidStats", "compute_void",
+           "reduce_cs"]

@@ -46,7 +46,28 @@ def test_dead_endpoint_replans_and_flags_partial(small_fed, small_stats, workloa
         if res.partial:
             hit += 1
             assert res.excluded == ["DBpedia"]
-            assert res.replans >= 1
+            # the default session salvages the pipeline's operator state on a
+            # mid-query death: one salvage, zero replans
+            assert res.salvages >= 1 and res.replans == 0
+    assert hit > 0, "no query touched the dead endpoint?"
+
+
+def test_dead_endpoint_replan_mode_still_replans(small_fed, small_stats, workload):
+    """salvage=False restores the legacy exclude-and-replan loop."""
+    fed, _ = small_fed
+    srcs = [FlakySource(s, dead=(s.name == "DBpedia")) for s in fed.sources]
+    flaky = Federation(srcs, fed.dictionary)
+    survivors = Federation([s for s in fed.sources if s.name != "DBpedia"],
+                           fed.dictionary)
+    session = FailoverSession(flaky, small_stats, salvage=False)
+    hit = 0
+    for q in workload:
+        res = session.execute(q)
+        assert _result_set(res.rows, q.effective_projection()) == \
+            naive_evaluate(survivors, q)
+        if res.partial and res.replans:
+            hit += 1
+            assert res.salvages == 0
     assert hit > 0, "no query touched the dead endpoint?"
 
 
@@ -62,7 +83,8 @@ def test_failover_session_plan_cache_survives_replan(small_fed, small_stats, wor
                            fed.dictionary)
     session = FailoverSession(flaky, small_stats)
     first = [session.execute(q) for q in workload]
-    kill = next((i for i, r in enumerate(first) if r.replans >= 1), None)
+    kill = next((i for i, r in enumerate(first)
+                 if r.salvages >= 1 or r.replans >= 1), None)
     assert kill is not None, "no query touched the dead endpoint?"
     # once excluded, every later answer is honestly partial
     assert all(r.partial and r.excluded == ["DBpedia"] for r in first[kill:])
@@ -70,10 +92,12 @@ def test_failover_session_plan_cache_survives_replan(small_fed, small_stats, wor
     assert epoch >= 1
     # templated repetition: same structure => plan-cache hit, zero replans.
     # Queries planned *before* the exclusion are epoch-stale: lazily evicted
-    # and replanned exactly once, then they hit too (third pass).
+    # and replanned exactly once, then they hit too (third pass).  The killed
+    # query itself was *salvaged*, never replanned, so its plan is also
+    # pre-exclusion stale: the boundary is kill+1.
     second = [session.execute(q) for q in workload]
-    assert all(r.cache_hit and r.replans == 0 for r in second[kill:])
-    assert all(not r.cache_hit for r in second[:kill])
+    assert all(r.cache_hit and r.replans == 0 for r in second[kill + 1:])
+    assert all(not r.cache_hit for r in second[:kill + 1])
     assert all(r.stats_epoch == epoch for r in second)
     third = [session.execute(q) for q in workload]
     assert all(r.cache_hit and r.replans == 0 for r in third)
@@ -102,6 +126,9 @@ def test_failover_session_execute_batch(small_fed, small_stats, workload):
     assert len(first) == len(workload)
     assert session.excluded == ["DBpedia"]
     assert any(r.replans >= 1 for r in first), "no query touched the dead endpoint?"
+    # the query that was running when the endpoint died completed on its
+    # salvaged operator state instead of joining the batched replan
+    assert any(r.salvages >= 1 for r in first)
     for q, r in zip(workload, first):
         assert _result_set(r.rows, q.effective_projection()) == \
             naive_evaluate(survivors, q)
@@ -111,10 +138,12 @@ def test_failover_session_execute_batch(small_fed, small_stats, workload):
     second = session.execute_batch(workload)
     # one epoch for the whole repeat batch; queries replanned after the
     # exclusion are cache hits, pre-exclusion plans are epoch-stale and
-    # replanned exactly once — the third batch hits throughout
+    # replanned exactly once — the third batch hits throughout.  The killed
+    # query was salvaged, not replanned: its plan is pre-exclusion stale too,
+    # so the boundary is kill+1.
     assert {r.stats_epoch for r in second} == {epoch}
-    assert all(r.cache_hit and r.replans == 0 for r in second[kill:])
-    assert all(not r.cache_hit for r in second[:kill])
+    assert all(r.cache_hit and r.replans == 0 for r in second[kill + 1:])
+    assert all(not r.cache_hit for r in second[:kill + 1])
     assert all(r.partial and r.excluded == ["DBpedia"] for r in second)
     third = session.execute_batch(workload)
     assert all(r.cache_hit and r.replans == 0 for r in third)
